@@ -1,0 +1,37 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (one row per cell)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_reports(mesh: str = None):
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def run(fast: bool = True):
+    rows = []
+    for r in load_reports(mesh="single"):
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            r["step_time_bound"] * 1e6,
+            f"dominant={r['dominant']};roofline={100*r['roofline_fraction']:.1f}%;"
+            f"Tc={r['t_comp']:.4f};Tm={r['t_mem']:.4f};Tx={r['t_coll']:.4f};"
+            f"MF/HLO={r['flops_ratio']:.3f}",
+        ))
+    if not rows:
+        rows.append(("roofline/none", 0.0, "run launch.dryrun --all first"))
+    return rows

@@ -1,0 +1,55 @@
+"""Benchmark driver — one module per paper table / system aspect.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1_accuracy — paper Table I (Waveform accuracy per DR config)
+  table2_cost     — paper Table II (hardware-cost model + m/p scaling)
+  ica_quality     — Amari distance vs block size (TPU estimator parity)
+  throughput      — DR update/transform μs/call (CPU; kernels interpret-mode)
+  roofline_table  — §Roofline rows aggregated from the dry-run JSONs
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import ica_quality, roofline_table, table1_accuracy, table2_cost, throughput
+
+SUITES = {
+    "table2_cost": table2_cost,
+    "ica_quality": ica_quality,
+    "throughput": throughput,
+    "table1_accuracy": table1_accuracy,
+    "roofline_table": roofline_table,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="full (slow) protocol")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row_name, us, derived in mod.run(fast=not args.full):
+                print(f"{row_name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

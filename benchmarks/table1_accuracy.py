@@ -1,0 +1,32 @@
+"""Paper Table I benchmark: Waveform-V2 classification accuracy per DR config.
+
+Single-seed, reduced-epoch variant of examples/waveform_repro.py (the full
+3-seed protocol is archived in EXPERIMENTS.md §Paper-parity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+
+from repro.configs import waveform_paper as wp
+from repro.core import pipeline
+from repro.data import waveform
+
+
+def run(fast: bool = True):
+    (xtr, ytr), (xte, yte) = waveform.paper_split(seed=0)
+    xtr, ytr, xte, yte = map(jnp.asarray, (xtr, ytr, xte, yte))
+    rows = []
+    for name, cfg in wp.TABLE1_ROWS.items():
+        c = dataclasses.replace(cfg, seed=0)
+        if fast:
+            c = dataclasses.replace(c, dr_epochs=max(1, c.dr_epochs // 4), head_epochs=15)
+        t0 = time.perf_counter()
+        model = pipeline.fit_two_stage(c, xtr, ytr)
+        acc = pipeline.evaluate(model, xte, yte)
+        dt = time.perf_counter() - t0
+        rows.append((f"table1/{name}", dt * 1e6, f"acc={acc*100:.1f}%;paper={wp.PAPER_TABLE1[name]}"))
+    return rows

@@ -1,0 +1,42 @@
+"""DR-unit throughput: update/transform μs per call, jnp vs Pallas path.
+
+NOTE: this container is CPU-only; the Pallas path runs in interpret mode,
+so kernel timings here measure CORRECTNESS-path overhead, not TPU speed —
+TPU projections come from the roofline tables instead.  The jnp numbers
+are still useful as relative-throughput regressions.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dr_unit
+
+
+def _bench(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(fast: bool = True):
+    rows = []
+    for (m, p, n, block) in ((32, 16, 8, 32), (1024, 256, 128, 256)):
+        cfg = dr_unit.DRConfig(kind="rp_easi", m=m, p=p, n=n, mu=2e-4,
+                               block_size=block)
+        st = dr_unit.init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (block, m), jnp.float32)
+
+        upd = jax.jit(lambda s, xb: dr_unit.update(s, cfg, xb))
+        tfm = jax.jit(lambda s, xb: dr_unit.transform(s, cfg, xb))
+        rows.append((f"throughput/update_m{m}", _bench(upd, st, x),
+                     f"block={block};tokens_per_call={block}"))
+        rows.append((f"throughput/transform_m{m}", _bench(tfm, st, x), ""))
+    return rows

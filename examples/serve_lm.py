@@ -1,0 +1,59 @@
+"""Batched serving: prefill a batch of prompts, decode greedily with the KV
+cache (ring-buffered for SWA archs), on the reduced h2o-danube3 config.
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--tokens 16] [--batch 4]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import api
+from repro.serve import serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o_danube3_4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = registry.get_smoke(args.arch)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    cache_size = args.prompt_len + args.tokens
+
+    mesh = make_smoke_mesh()
+    with mesh:
+        prefill = serve_step.make_prefill(cfg, mesh, params, {"tokens": prompts}, cache_size)
+        logits, cache = prefill(params, {"tokens": prompts})
+        decode = serve_step.make_decode(cfg, mesh, params, cache)
+
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = [tok]
+        t0 = time.perf_counter()
+        for _ in range(args.tokens - 1):
+            logits, cache = decode(params, tok, cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+
+    gen = jnp.stack(out, axis=1)
+    print(f"arch={cfg.name} (smoke) window={cfg.sliding_window} "
+          f"cache={cache['k'].shape}")
+    for i in range(args.batch):
+        print(f"req {i}: prompt={prompts[i, :8].tolist()}… -> {gen[i].tolist()}")
+    print(f"decode: {args.tokens - 1} steps × batch {args.batch} in {dt*1e3:.0f} ms "
+          f"({(args.tokens-1)*args.batch/dt:.0f} tok/s on CPU smoke config)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""repro: scalable training & deployment of dimensionality-reduction models.
+
+JAX/TPU reproduction + scale-out of:
+  Nazemi, Eshratifar, Pedram — "A Hardware-Friendly Algorithm for Scalable
+  Training and Deployment of Dimensionality Reduction Models on FPGA" (2018).
+
+Public API re-exports live in subpackages:
+  repro.core      — RP / PCA-whitening / EASI / reconfigurable DR unit
+  repro.models    — backbone model zoo (transformer / rwkv6 / ssm hybrids)
+  repro.train     — optimizer, train_step, fault-tolerant trainer
+  repro.serve     — prefill/decode with (optionally RP-compressed) KV cache
+  repro.dist      — mesh, sharding rules, gradient compression
+  repro.kernels   — Pallas TPU kernels (ternary matmul, fused EASI update)
+  repro.configs   — assigned architecture registry
+  repro.launch    — production mesh, dry-run, roofline, drivers
+"""
+
+__version__ = "0.1.0"

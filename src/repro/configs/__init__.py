@@ -1,0 +1,8 @@
+"""Architecture + experiment config registry.
+
+`repro.configs.registry.get(arch_id)` returns the full-size assigned config;
+`.smoke()` on any config returns the reduced same-family config used by CPU
+smoke tests.
+"""
+
+from repro.configs import waveform_paper  # noqa: F401

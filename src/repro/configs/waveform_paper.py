@@ -1,0 +1,68 @@
+"""The paper's own experiment (§V): Waveform-V2, m=32 → {16, 8}.
+
+Locked Table-I reproduction protocol (see EXPERIMENTS.md §Paper-parity for
+measured numbers and the init-sensitivity analysis):
+
+  * preprocessing: centre + one global scalar scale (pipeline convention)
+  * DR init: random row-orthonormal subspace for EVERY row of the table —
+    rectangular EASI provably cannot rotate span(B₀) (easi.init_b doc), so
+    init-matched comparisons are the only fair reading of the paper's
+    "RP+EASI ≈ EASI" claim.  Eye/strided-init reference rows are included as
+    ablations.
+  * rp_easi rows use the paper's proposed bypassed (rotation-only) datapath;
+    per-sample cubic updates are unstable on unwhitened RP output (documented
+    divergence), so the bypassed rows use the block-averaged estimator
+    (block=32) with μ=2e-4 — the TPU-adapted form of the same estimator.
+  * full-EASI rows: per-sample (block=1), μ=1e-3, 3 epochs — paper-exact
+    streaming.
+"""
+
+from __future__ import annotations
+
+from repro.core.dr_unit import DRConfig
+from repro.core.pipeline import TwoStageConfig
+
+M = 32  # paper drops the last 8 of 40 features
+
+# ---- Table I rows (paper order) -------------------------------------------
+TABLE1_ROWS = {
+    # (Algorithm1, p, Algorithm2, n) -> config
+    "easi_n16": TwoStageConfig(
+        dr=DRConfig(kind="easi", m=M, n=16, mu=1e-3, block_size=1), dr_epochs=3),
+    "rp24_easi_n16": TwoStageConfig(
+        dr=DRConfig(kind="rp_easi", m=M, p=24, n=16, mu=2e-4, block_size=32,
+                    bypass_whitening=True), dr_epochs=40),
+    "easi_n8": TwoStageConfig(
+        dr=DRConfig(kind="easi", m=M, n=8, mu=1e-3, block_size=1), dr_epochs=3),
+    "rp16_easi_n8": TwoStageConfig(
+        dr=DRConfig(kind="rp_easi", m=M, p=16, n=8, mu=2e-4, block_size=32,
+                    bypass_whitening=True), dr_epochs=40),
+}
+
+PAPER_TABLE1 = {  # paper's reported accuracies (%)
+    "easi_n16": 84.6,
+    "rp24_easi_n16": 84.5,
+    "easi_n8": 80.9,
+    "rp16_easi_n8": 80.8,
+}
+
+# ---- ablation / reference rows ---------------------------------------------
+ABLATION_ROWS = {
+    "easi_n16_eyeinit": TwoStageConfig(
+        dr=DRConfig(kind="easi", m=M, n=16, mu=1e-3, block_size=1, init="eye"), dr_epochs=3),
+    "easi_n8_strided": TwoStageConfig(
+        dr=DRConfig(kind="easi", m=M, n=8, mu=1e-3, block_size=1, init="strided"), dr_epochs=3),
+    "rp24_easi_n16_fullEASI": TwoStageConfig(
+        dr=DRConfig(kind="rp_easi", m=M, p=24, n=16, mu=5e-4, block_size=1,
+                    bypass_whitening=False), dr_epochs=3),
+    "rp_n16": TwoStageConfig(dr=DRConfig(kind="rp", m=M, n=16), dr_epochs=1),
+    "rp_n8": TwoStageConfig(dr=DRConfig(kind="rp", m=M, n=8), dr_epochs=1),
+    "whiten_n16": TwoStageConfig(
+        dr=DRConfig(kind="whiten", m=M, n=16, mu=1e-3, block_size=1), dr_epochs=3),
+}
+
+# Table II configs (hardware-cost comparison): EASI 32->8 vs RP(16)+EASI 16->8
+TABLE2_PAIR = {
+    "easi_32_8": DRConfig(kind="easi", m=32, n=8, mu=5e-4),
+    "rp16_easi_8": DRConfig(kind="rp_easi", m=32, p=16, n=8, mu=5e-4),
+}

@@ -1,0 +1,20 @@
+"""The paper's primary contribution: reconfigurable dimensionality reduction.
+
+  random_projection — sparse ternary RP (Fox'16 distribution), int8 storage
+  easi              — EASI ICA update (Eq. 6) + rotation-only variant (Eq. 5)
+  whitening         — adaptive PCA whitening (Eq. 3) = EASI with HOS muxed out
+  dr_unit           — the reconfigurable unit (RP | whiten | EASI | rotation |
+                      RP→EASI | RP→whiten) behind one update/transform API
+  pipeline          — two-stage trainer (unsupervised DR → supervised head)
+"""
+
+from repro.core import dr_unit, easi, pipeline, random_projection, whitening
+from repro.core.dr_unit import DRConfig, DRState
+from repro.core.easi import EASIConfig, amari_distance, whiteness_kl
+from repro.core.random_projection import RPConfig
+
+__all__ = [
+    "dr_unit", "easi", "pipeline", "random_projection", "whitening",
+    "DRConfig", "DRState", "EASIConfig", "RPConfig",
+    "amari_distance", "whiteness_kl",
+]

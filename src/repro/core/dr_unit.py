@@ -1,0 +1,174 @@
+"""The reconfigurable dimensionality-reduction unit (paper §IV).
+
+One datapath, five personalities (the paper's multiplexer, as static config):
+
+    kind='rp'         pure ternary random projection            m → n
+    kind='whiten'     adaptive PCA whitening   (Eq. 3)          m → n
+    kind='easi'       full EASI ICA            (Eq. 6)          m → n
+    kind='rotation'   EASI with 2nd-order term bypassed (Eq. 5) m → n
+    kind='rp_easi'    THE PAPER'S PROPOSAL: RP (m → p) followed by an EASI
+                      stage (p → n) whose whitening term is bypassed
+                      (set `bypass_whitening=False` to keep full EASI after
+                      RP — the ablation the paper's Table I row 2/4 allows)
+    kind='rp_whiten'  RP (m → p) followed by adaptive whitening (p → n)
+
+All personalities share `update()` / `transform()` so the surrounding system
+(two-stage trainer, LM front-end, serving path) is agnostic to which
+algorithm is configured — the software equivalent of "the same hardware
+implements random projection, PCA whitening, ICA, or a combination".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import easi as easi_mod
+from repro.core import random_projection as rp_mod
+
+KINDS = ("rp", "whiten", "easi", "rotation", "rp_easi", "rp_whiten")
+
+
+@dataclasses.dataclass(frozen=True)
+class DRConfig:
+    kind: str
+    m: int                          # input feature dim
+    n: int                          # output (reduced) dim
+    p: Optional[int] = None         # intermediate dim (rp_* kinds only)
+    mu: float = 1e-3
+    g: str = "cubic"
+    bypass_whitening: bool = True   # paper's modified datapath for rp_easi
+    normalized: bool = False
+    rp_sparsity: Optional[int] = None
+    block_size: int = 1             # samples per update block (1 = paper-exact)
+    init: str = "orthonormal"       # B₀ subspace choice — see easi.init_b
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown DR kind {self.kind!r}; one of {KINDS}")
+        if self.kind.startswith("rp_") and self.p is None:
+            raise ValueError(f"kind={self.kind} requires intermediate dim p")
+        if self.kind.startswith("rp_") and not (self.m >= self.p >= self.n):
+            raise ValueError(f"need m >= p >= n, got {self.m}/{self.p}/{self.n}")
+
+    # ---- derived stage configs -------------------------------------------
+    @property
+    def rp_cfg(self) -> Optional[rp_mod.RPConfig]:
+        if self.kind == "rp":
+            return rp_mod.RPConfig(m=self.m, p=self.n, sparsity=self.rp_sparsity, dtype=self.dtype)
+        if self.kind.startswith("rp_"):
+            return rp_mod.RPConfig(m=self.m, p=self.p, sparsity=self.rp_sparsity, dtype=self.dtype)
+        return None
+
+    @property
+    def easi_cfg(self) -> Optional[easi_mod.EASIConfig]:
+        if self.kind == "rp":
+            return None
+        m_in = self.p if self.kind.startswith("rp_") else self.m
+        second, higher = {
+            "whiten": (True, False),
+            "easi": (True, True),
+            "rotation": (False, True),
+            "rp_easi": (not self.bypass_whitening, True),
+            "rp_whiten": (True, False),
+        }[self.kind]
+        # rp_easi with bypass needs at least the HOS term; guaranteed above.
+        return easi_mod.EASIConfig(
+            m=m_in, n=self.n, mu=self.mu, g=self.g,
+            second_order=second, higher_order=higher,
+            normalized=self.normalized, init=self.init, dtype=self.dtype,
+        )
+
+    # ---- paper Table II cost model (MAC counts) ---------------------------
+    def mac_counts(self) -> dict:
+        """Adder/multiplier-equivalent counts per processed sample.
+
+        EASI stage (Alg. 1 over Fig. 3's five stages) is Θ(m·n²) in both
+        adders and multipliers; RP costs only E[nnz] = p·m/s additions.
+        This is the model under which the paper's Table II shows the ~m/p
+        resource saving; `benchmarks/table2_cost.py` prints the full table.
+        """
+        def easi_macs(m, n, second, higher):
+            mv = n * m                     # y = Bx
+            nl = 2 * n if higher else 0    # cubic
+            outer = (n * n if second else 0) + (2 * n * n if higher else 0)
+            gradb = n * n * m              # G @ B
+            upd = n * m                    # B − μ(·)
+            return mv + nl + outer + gradb + upd
+
+        if self.kind == "rp":
+            return {"rp_adds": self.rp_cfg.expected_nonzeros(), "easi_macs": 0}
+        if self.kind.startswith("rp_"):
+            e = self.easi_cfg
+            return {
+                "rp_adds": self.rp_cfg.expected_nonzeros(),
+                "easi_macs": easi_macs(e.m, e.n, e.second_order, e.higher_order),
+            }
+        e = self.easi_cfg
+        return {"rp_adds": 0, "easi_macs": easi_macs(e.m, e.n, e.second_order, e.higher_order)}
+
+
+class DRState(NamedTuple):
+    """Learnable/static state of a DR unit. A valid JAX pytree."""
+
+    r: Optional[jax.Array]   # int8 ternary (p|n, m) or None
+    b: Optional[jax.Array]   # f32 separation/whitening matrix (n, p|m) or None
+    steps: jax.Array         # int32 scalar update counter
+
+
+def init(key: jax.Array, cfg: DRConfig) -> DRState:
+    kr, kb = jax.random.split(key)
+    r = sample_r(kr, cfg)
+    b = None
+    if cfg.easi_cfg is not None:
+        b = easi_mod.init_b(kb, cfg.easi_cfg)
+    return DRState(r=r, b=b, steps=jnp.zeros((), jnp.int32))
+
+
+def sample_r(key: jax.Array, cfg: DRConfig) -> Optional[jax.Array]:
+    return rp_mod.sample_ternary(key, cfg.rp_cfg) if cfg.rp_cfg is not None else None
+
+
+def _front(state: DRState, cfg: DRConfig, x: jax.Array, *, use_kernel: bool = False) -> jax.Array:
+    """Apply the (optional) RP stage."""
+    if cfg.rp_cfg is None:
+        return x.astype(cfg.dtype)
+    return rp_mod.apply_rp(state.r, x, cfg.rp_cfg, use_kernel=use_kernel)
+
+
+def transform(state: DRState, cfg: DRConfig, x: jax.Array, *, use_kernel: bool = False) -> jax.Array:
+    """Inference: x (..., m) -> reduced features (..., n)."""
+    h = _front(state, cfg, x, use_kernel=use_kernel)
+    if state.b is None:
+        return h
+    return easi_mod.transform(state.b, h)
+
+
+def update(state: DRState, cfg: DRConfig, x_block: jax.Array, *, use_kernel: bool = False) -> DRState:
+    """One unsupervised training step on a block x (b, m)."""
+    if state.b is None:  # pure RP: nothing to train
+        return state._replace(steps=state.steps + 1)
+    h = _front(state, cfg, x_block, use_kernel=use_kernel)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        b_new = kops.easi_update(state.b, h, cfg.easi_cfg)
+    else:
+        b_new, _ = easi_mod.easi_step(state.b, h, cfg.easi_cfg)
+    return DRState(r=state.r, b=b_new, steps=state.steps + 1)
+
+
+def fit(state: DRState, cfg: DRConfig, x: jax.Array, *, epochs: int = 1, use_kernel: bool = False) -> DRState:
+    """Stream a dataset x (N, m) through `update` in cfg.block_size blocks."""
+    if state.b is None:
+        return state._replace(steps=state.steps + jnp.int32(epochs * (x.shape[0] // max(1, cfg.block_size))))
+    h = _front(state, cfg, x, use_kernel=use_kernel)  # project once, train on h
+    b = easi_mod.easi_fit(
+        state.b, h, cfg.easi_cfg, block_size=cfg.block_size, epochs=epochs, use_kernel=use_kernel
+    )
+    nblocks = epochs * (x.shape[0] // cfg.block_size)
+    return DRState(r=state.r, b=b, steps=state.steps + jnp.int32(nblocks))

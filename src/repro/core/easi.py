@@ -1,0 +1,216 @@
+"""EASI — Equivariant Adaptive Separation via Independence (paper §III-D, Eq. 6).
+
+Separation matrix B (n × m) trained online:
+
+    y   = B x
+    B  ←  B − μ [ y yᵀ − I  +  g(y) yᵀ − y g(y)ᵀ ] B          (Eq. 6)
+
+`y yᵀ − I` is the second-order (whitening) term; the skew-symmetric
+`g(y) yᵀ − y g(y)ᵀ` injects higher-order statistics (g = cubic, Alg. 1).
+
+The paper's proposed datapath *bypasses* the second-order term when the input
+has already been passed through a random projection, leaving a pure rotation
+update (Eq. 5 applied to B).  Both terms are independently maskable here —
+that is the "multiplexer" that makes one datapath serve PCA whitening
+(second-order only), full EASI (both), and rotation-only EASI (higher-order
+only).  See `repro.core.dr_unit.DRUnit` for the packaged unit.
+
+TPU adaptation: the FPGA streams one sample per cycle through a systolic MAC
+array.  A TPU is a batch machine, so we use the block-expectation form of the
+same estimator: for a block Y (b × n),
+
+    G = (YᵀY)/b − I + (g(Y)ᵀY − Yᵀg(Y))/b,     B ← B − μ G B
+
+which reduces to the per-sample rule at b = 1 (used for paper-exact
+validation).  The fused Pallas kernel (`repro.kernels.easi_update`) computes
+G and the update in one VMEM-resident pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Nonlinearity = Callable[[jax.Array], jax.Array]
+
+NONLINEARITIES: dict[str, Nonlinearity] = {
+    "cubic": lambda y: y * y * y,            # paper Algorithm 1, line 3
+    "tanh": jnp.tanh,                         # classic robust alternative
+    "sign_cubic": lambda y: jnp.sign(y) * y * y,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EASIConfig:
+    """Static configuration of one EASI / whitening / rotation stage m -> n."""
+
+    m: int                       # input dim of this stage
+    n: int                       # output dim (n <= m)
+    mu: float = 1e-3             # learning rate (paper: constant μ_k = μ)
+    g: str = "cubic"
+    second_order: bool = True    # keep the  y yᵀ − I   whitening term
+    higher_order: bool = True    # keep the  g(y)yᵀ − y g(y)ᵀ  HOS term
+    normalized: bool = False     # Cardoso's normalized-EASI stabilisation
+    init: str = "orthonormal"    # B₀: "orthonormal" | "eye" | "strided"
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if self.n > self.m:
+            raise ValueError(f"EASI must not increase dimensionality: m={self.m} n={self.n}")
+        if not (self.second_order or self.higher_order):
+            raise ValueError("at least one of second_order/higher_order must be on")
+        if self.g not in NONLINEARITIES:
+            raise ValueError(f"unknown nonlinearity {self.g!r}")
+        if self.init not in ("orthonormal", "eye", "strided"):
+            raise ValueError(f"unknown init {self.init!r}")
+
+
+def init_b(key: jax.Array, cfg: EASIConfig) -> jax.Array:
+    """B₀ — and with it, THE reduction subspace.
+
+    A consequence the paper never states: Eq. 6 updates B multiplicatively on
+    the left, B ← (I − μG)B with G n×n, so **rowspace(B) is invariant for all
+    time** — rectangular EASI whitens/rotates *within* span(B₀ᵀ) but can
+    never steer the n-dim subspace itself.  The init therefore decides what
+    information survives the reduction:
+
+      * "orthonormal": QR of a Gaussian — a uniformly random n-subspace
+        (our default; also what RP effectively supplies in the rp_easi chain,
+        making init-matched comparisons fair).
+      * "eye":      B₀ = [I_n | 0] — taps the first n input features; the
+        natural FPGA init (no RNG in hardware).
+      * "strided":  one tap every m/n features — decimation wiring.
+
+    EXPERIMENTS.md §Paper-parity quantifies how strongly Table I accuracies
+    depend on this choice.
+    """
+    if cfg.init == "eye":
+        return jnp.eye(cfg.n, cfg.m, dtype=cfg.dtype)
+    if cfg.init == "strided":
+        cols = jnp.round(jnp.arange(cfg.n) * (cfg.m / cfg.n)).astype(jnp.int32)
+        return jax.nn.one_hot(cols, cfg.m, dtype=cfg.dtype)
+    a = jax.random.normal(key, (cfg.m, cfg.n), dtype=jnp.float32)
+    q, _ = jnp.linalg.qr(a)  # (m, n) with orthonormal columns
+    return q.T.astype(cfg.dtype)  # (n, m) orthonormal rows
+
+
+def relative_gradient(y: jax.Array, cfg: EASIConfig) -> jax.Array:
+    """G (n×n) from a block of outputs y (b, n) — the Eq. 6 bracket.
+
+    Block-expectation estimator; b=1 recovers the per-sample paper rule.
+    """
+    if y.ndim == 1:
+        y = y[None, :]
+    b = y.shape[0]
+    n = y.shape[1]
+    inv_b = jnp.asarray(1.0 / b, y.dtype)
+    g_fn = NONLINEARITIES[cfg.g]
+    gy = g_fn(y)
+
+    terms = jnp.zeros((n, n), dtype=y.dtype)
+    if cfg.second_order:
+        c = (y.T @ y) * inv_b
+        terms = terms + c - jnp.eye(n, dtype=y.dtype)
+    if cfg.higher_order:
+        h = (gy.T @ y) * inv_b
+        terms = terms + h - h.T  # g(y)yᵀ − y g(y)ᵀ  (skew-symmetric)
+    if cfg.normalized:
+        # Cardoso's normalised EASI: divide 2nd-order term by 1 + μ yᵀy and the
+        # HOS term by 1 + μ |yᵀ g(y)| (block-averaged); bounds the update norm.
+        yy = jnp.mean(jnp.sum(y * y, axis=-1))
+        ygy = jnp.abs(jnp.mean(jnp.sum(y * gy, axis=-1)))
+        denom2 = 1.0 + cfg.mu * yy
+        denomh = 1.0 + cfg.mu * ygy
+        # Recompute with per-term scaling (cheap: reuse matmuls above).
+        terms = jnp.zeros((n, n), dtype=y.dtype)
+        if cfg.second_order:
+            c = (y.T @ y) * inv_b
+            terms = terms + (c - jnp.eye(n, dtype=y.dtype)) / denom2
+        if cfg.higher_order:
+            h = (gy.T @ y) * inv_b
+            terms = terms + (h - h.T) / denomh
+    return terms
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def easi_step(b_mat: jax.Array, x_block: jax.Array, cfg: EASIConfig) -> Tuple[jax.Array, jax.Array]:
+    """One EASI update from a raw input block x (b, m). Returns (B', y)."""
+    y = x_block.astype(b_mat.dtype) @ b_mat.T
+    g = relative_gradient(y, cfg)
+    b_new = b_mat - cfg.mu * (g @ b_mat)
+    return b_new, y
+
+
+def easi_fit(
+    b0: jax.Array,
+    x: jax.Array,
+    cfg: EASIConfig,
+    *,
+    block_size: int = 1,
+    epochs: int = 1,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Stream x (N, m) through EASI in blocks via lax.scan; returns trained B.
+
+    block_size=1 is the paper-faithful per-sample SGD; larger blocks are the
+    TPU-adapted batched estimator.  Trailing samples that do not fill a block
+    are dropped (deterministic, restart-safe).
+    """
+    n_samples = x.shape[0]
+    nblocks = n_samples // block_size
+    blocks = x[: nblocks * block_size].reshape(nblocks, block_size, cfg.m)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def body(b_mat, blk):
+            return kops.easi_update(b_mat, blk, cfg), None
+    else:
+        def body(b_mat, blk):
+            b_new, _ = easi_step(b_mat, blk, cfg)
+            return b_new, None
+
+    @jax.jit
+    def one_epoch(b_mat):
+        b_out, _ = jax.lax.scan(body, b_mat, blocks)
+        return b_out
+
+    b_mat = b0
+    for _ in range(epochs):
+        b_mat = one_epoch(b_mat)
+    return b_mat
+
+
+def transform(b_mat: jax.Array, x: jax.Array) -> jax.Array:
+    """y = B x for batched rows x (..., m) -> (..., n)."""
+    return x @ b_mat.T
+
+
+# ---------------------------------------------------------------------------
+# Validation metrics
+# ---------------------------------------------------------------------------
+
+def whiteness_kl(y: jax.Array) -> jax.Array:
+    """KL(Σ_y ‖ I) = ½(tr Σ − log det Σ − n): the objective Eq. 3 minimises."""
+    b, n = y.shape
+    cov = y.T @ y / b
+    sign, logdet = jnp.linalg.slogdet(cov)
+    return 0.5 * (jnp.trace(cov) - logdet - n)
+
+
+def amari_distance(w: jax.Array, a: jax.Array) -> jax.Array:
+    """Amari index of P = W A against a scaled permutation (0 = perfect ICA).
+
+    Standard ICA recovery metric: for the true mixing A (m×n) and learned
+    separator W (n×m), P = W A should be a scaled permutation matrix.
+    Normalised to [0, 1]-ish by 2n(n−1).
+    """
+    p = jnp.abs(w @ a)
+    n = p.shape[0]
+    row = jnp.sum(p / jnp.max(p, axis=1, keepdims=True), axis=1) - 1.0
+    col = jnp.sum(p / jnp.max(p, axis=0, keepdims=True), axis=0) - 1.0
+    return (jnp.sum(row) + jnp.sum(col)) / (2.0 * n * (n - 1))

@@ -1,0 +1,100 @@
+"""Two-stage training pipeline (paper §V-B).
+
+  Stage 1 — train the DR model unsupervised on raw features.
+  Stage 2 — transform the dataset and train a downstream head
+            (paper: MLP, 2 hidden layers × 64) on the reduced features.
+
+Preprocessing convention (important — see EXPERIMENTS.md §Paper-parity):
+the DR stage sees *centred* data rescaled by ONE global scalar (mean per-dim
+variance → 1).  Per-feature standardisation would erase the signal-vs-noise
+variance gap that dimensionality reduction exists to exploit; a single global
+scale is what a fixed-point datapath needs to stay in range and preserves
+relative variances exactly.  The head input (reduced features) is then
+per-feature standardised, which is ordinary classifier hygiene.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dr_unit
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoStageConfig:
+    dr: dr_unit.DRConfig
+    dr_epochs: int = 3
+    head_hidden: Tuple[int, ...] = (64, 64)   # paper §V-B
+    head_classes: int = 3
+    head_lr: float = 5e-4
+    head_wd: float = 1e-2
+    head_epochs: int = 60
+    head_batch: int = 128
+    seed: int = 0
+
+
+def standardize(x: jax.Array, stats: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Per-feature zero-mean/unit-var (head-input hygiene)."""
+    if stats is None:
+        mean = jnp.mean(x, axis=0)
+        std = jnp.std(x, axis=0) + 1e-8
+    else:
+        mean, std = stats
+    return (x - mean) / std, (mean, std)
+
+
+def center_global_scale(x: jax.Array, stats=None):
+    """Centre + ONE scalar scale (mean per-dim variance -> 1). DR-stage prep."""
+    if stats is None:
+        mean = jnp.mean(x, axis=0)
+        scale = jnp.sqrt(jnp.mean(jnp.var(x - mean, axis=0))) + 1e-8
+    else:
+        mean, scale = stats
+    return (x - mean) / scale, (mean, scale)
+
+
+def fit_two_stage(
+    cfg: TwoStageConfig,
+    x_train: jax.Array,
+    y_train: jax.Array,
+    *,
+    use_kernel: bool = False,
+) -> Dict[str, Any]:
+    """Returns dict with dr_state, head params, and both stats tuples."""
+    from repro.models import mlp  # local import to keep core standalone
+
+    key = jax.random.PRNGKey(cfg.seed)
+    k_dr, k_head, k_shuf = jax.random.split(key, 3)
+
+    x_dr, dr_stats = center_global_scale(x_train)
+    dr_state = dr_unit.init(k_dr, cfg.dr)
+    dr_state = dr_unit.fit(dr_state, cfg.dr, x_dr, epochs=cfg.dr_epochs, use_kernel=use_kernel)
+
+    feats = dr_unit.transform(dr_state, cfg.dr, x_dr, use_kernel=use_kernel)
+    feats_std, head_stats = standardize(feats)
+    head = mlp.init(k_head, feats.shape[-1], cfg.head_hidden, cfg.head_classes)
+    head = mlp.fit(
+        head, feats_std, y_train,
+        lr=cfg.head_lr, wd=cfg.head_wd, epochs=cfg.head_epochs, batch=cfg.head_batch, key=k_shuf,
+    )
+    return {"dr_state": dr_state, "head": head, "dr_stats": dr_stats,
+            "head_stats": head_stats, "cfg": cfg}
+
+
+def predict(model: Dict[str, Any], x: jax.Array, *, use_kernel: bool = False) -> jax.Array:
+    from repro.models import mlp
+
+    cfg: TwoStageConfig = model["cfg"]
+    x_dr, _ = center_global_scale(x, model["dr_stats"])
+    feats = dr_unit.transform(model["dr_state"], cfg.dr, x_dr, use_kernel=use_kernel)
+    feats_std, _ = standardize(feats, model["head_stats"])
+    return mlp.apply(model["head"], feats_std)
+
+
+def evaluate(model: Dict[str, Any], x_test: jax.Array, y_test: jax.Array, *, use_kernel: bool = False) -> float:
+    logits = predict(model, x_test, use_kernel=use_kernel)
+    return float(jnp.mean((jnp.argmax(logits, -1) == y_test).astype(jnp.float32)))

@@ -1,0 +1,150 @@
+"""Sparse ternary random projection (paper §III-B, Fox'16 distribution).
+
+The paper samples R (p × m) elementwise from
+
+    r_ij = +1  with probability 1/(2s)
+            0  with probability 1 - 1/s
+           -1  with probability 1/(2s)
+
+with s equal to the *output* dimensionality (their `n`; here the
+intermediate dim `p` of the RP→EASI chain).  With s = p the projection is
+self-normalizing in expectation: E‖Rx‖² = p·‖x‖²/s = ‖x‖².  For any other
+sparsity we expose `normalize=True`, which scales by sqrt(s/p) so the
+Johnson–Lindenstrauss isometry E‖Rx‖² = ‖x‖² is preserved.
+
+Hardware adaptation (FPGA → TPU): on the FPGA the ternary alphabet removes
+multipliers (add/sub network).  The MXU cannot skip zeros, so the TPU win is
+*memory*: R is materialised as int8 (4× less HBM traffic than f32) and
+dequantised in VMEM inside the Pallas kernel (`repro.kernels.ternary_matmul`);
+this module holds the distribution, the dense jnp reference path, and the
+sharding-friendly functional API.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RPConfig:
+    """Static configuration of a ternary random projection m -> p.
+
+    `normalize` selects the (data-independent) output scale:
+      * "isometry": sqrt(s/p) — E‖Rx‖² = ‖x‖² (classic JL isometry)
+      * "per_dim":  sqrt(s/m) — Var[(Rx)_i] = ‖x‖²/m, i.e. each projected
+        dim carries the *average per-dim variance* of the input.  Uniform
+        global rescale of "isometry" (relative distances unchanged), but it
+        keeps a downstream EASI/rotation stage in the unit-variance regime
+        its cubic nonlinearity is stable in — this is what the paper's
+        fixed-point datapath implicitly assumes of its inputs.
+      * None: raw ±1 accumulation (the FPGA add/sub semantics).
+    """
+
+    m: int                      # input dimensionality
+    p: int                      # output (projected) dimensionality
+    sparsity: Optional[int] = None  # `s` above; defaults to p (paper's choice)
+    normalize: Optional[str] = "per_dim"
+    dtype: jnp.dtype = jnp.float32  # compute dtype of the projection output
+
+    def __post_init__(self):
+        if self.p > self.m:
+            raise ValueError(f"RP must not increase dimensionality: m={self.m} p={self.p}")
+        if self.s < 1:
+            raise ValueError(f"sparsity must be >= 1, got {self.s}")
+        if self.normalize not in (None, "isometry", "per_dim"):
+            raise ValueError(f"unknown normalize mode {self.normalize!r}")
+
+    @property
+    def s(self) -> int:
+        return self.p if self.sparsity is None else self.sparsity
+
+    @property
+    def scale(self) -> float:
+        if self.normalize == "isometry":
+            return math.sqrt(self.s / self.p)
+        if self.normalize == "per_dim":
+            return math.sqrt(self.s / self.m)
+        return 1.0
+
+    # ---- hardware cost model (paper Table II translation) -----------------
+    def expected_nonzeros(self) -> float:
+        """E[#nonzero entries of R] = p*m/s — the FPGA add/sub count."""
+        return self.p * self.m / self.s
+
+    def bytes_int8(self) -> int:
+        return self.p * self.m  # 1 byte per ternary entry
+
+    def bytes_f32(self) -> int:
+        return 4 * self.p * self.m
+
+
+def sample_ternary(key: jax.Array, cfg: RPConfig, *, ensure_nonzero_rows: bool = True) -> jax.Array:
+    """Sample R (p, m) int8 from the paper's ternary distribution.
+
+    `ensure_nonzero_rows`: at the paper's own scale (m=32, s=p=24) a row of R
+    is all-zero with probability (1−1/s)^m ≈ 26%, i.e. a *dead output wire* —
+    the projected covariance is singular and the downstream whitening update
+    W ← W − μ[zzᵀ−I]W inflates the dead row exponentially.  The FPGA
+    realization implicitly assumes live rows; we make that explicit by
+    planting one ±1 (uniform column, fair sign) in any empty row.  Documented
+    as a deviation in DESIGN.md §Known deltas.
+    """
+    ku, kc, ks = jax.random.split(key, 3)
+    u = jax.random.uniform(ku, (cfg.p, cfg.m))
+    half = 1.0 / (2.0 * cfg.s)
+    r = jnp.where(u < half, jnp.int8(1), jnp.where(u < 2 * half, jnp.int8(-1), jnp.int8(0)))
+    r = r.astype(jnp.int8)
+    if ensure_nonzero_rows:
+        dead = jnp.all(r == 0, axis=1)                       # (p,)
+        cols = jax.random.randint(kc, (cfg.p,), 0, cfg.m)    # one column per row
+        signs = jax.random.choice(ks, jnp.asarray([-1, 1], jnp.int8), (cfg.p,))
+        plant = (jax.nn.one_hot(cols, cfg.m, dtype=jnp.int8) * signs[:, None])
+        r = jnp.where(dead[:, None], plant, r)
+    return r
+
+
+@partial(jax.jit, static_argnames=("scale",))
+def _apply_dense(r_int8: jax.Array, x: jax.Array, scale: float) -> jax.Array:
+    """Reference dense path: y = scale * x @ Rᵀ for batched rows x (b, m)."""
+    r = r_int8.astype(x.dtype)
+    return (x @ r.T) * jnp.asarray(scale, x.dtype)
+
+
+def apply_rp(r_int8: jax.Array, x: jax.Array, cfg: RPConfig, *, use_kernel: bool = False) -> jax.Array:
+    """Project x (…, m) -> (…, p).
+
+    `use_kernel=True` routes through the Pallas ternary-matmul kernel
+    (TPU target; interpret-mode on CPU) — numerically identical to the
+    dense path (ternary entries are exact in every float dtype).
+    """
+    x2 = x.reshape((-1, cfg.m)).astype(cfg.dtype)
+    if use_kernel:
+        from repro.kernels import ops as kops  # local import: keep core dep-free
+
+        y = kops.ternary_matmul(x2, r_int8, scale=cfg.scale)
+    else:
+        y = _apply_dense(r_int8, x2, cfg.scale)
+    return y.reshape(x.shape[:-1] + (cfg.p,))
+
+
+def rp_gram_error(r_int8: jax.Array, cfg: RPConfig, x: jax.Array) -> jax.Array:
+    """Relative Frobenius error of the sample Gram matrix under projection.
+
+    ‖Y Yᵀ − X Xᵀ‖_F / ‖X Xᵀ‖_F  for Y = RXᵀ rows — the second-order
+    (inner-product / distance) structure the paper claims RP preserves, which
+    justifies bypassing the EASI whitening term.  E[YYᵀ] = XXᵀ by the JL
+    isometry; the error concentrates as O(1/sqrt(p)).
+    """
+    y = apply_rp(r_int8, x, cfg)
+    # Undo any global rescale so the comparison is in isometry units.
+    iso = math.sqrt(cfg.s / cfg.p)
+    y = y * (iso / cfg.scale)
+    gx = x @ x.T
+    gy = y @ y.T
+    return jnp.linalg.norm(gy - gx) / (jnp.linalg.norm(gx) + 1e-12)

@@ -1,0 +1,36 @@
+"""Adaptive PCA whitening (paper §III-C, Eq. 3).
+
+    z  = W x
+    W ← W − μ [ z zᵀ − I ] W
+
+This is exactly the EASI datapath with the higher-order term muxed out
+(paper §IV: "bypassed ... simply by using a multiplexer"), so the
+implementation delegates to `repro.core.easi` with `higher_order=False`.
+Kept as its own module because it is one of the three user-facing algorithms
+the reconfigurable hardware exposes (RP / PCA whitening / ICA).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import easi
+
+
+def whitening_config(m: int, n: int, mu: float = 1e-3, **kw) -> easi.EASIConfig:
+    """EASIConfig specialised to Eq. 3 (second-order only)."""
+    return easi.EASIConfig(m=m, n=n, mu=mu, second_order=True, higher_order=False, **kw)
+
+
+def init_w(key: jax.Array, cfg: easi.EASIConfig) -> jax.Array:
+    return easi.init_b(key, cfg)
+
+
+def whiten_fit(w0, x, cfg, *, block_size: int = 1, epochs: int = 1, use_kernel: bool = False):
+    """Train W on x (N, m); returns W minimising KL(Σ_z ‖ I)."""
+    assert not cfg.higher_order, "whitening must not carry the HOS term"
+    return easi.easi_fit(w0, x, cfg, block_size=block_size, epochs=epochs, use_kernel=use_kernel)
+
+
+transform = easi.transform
+whiteness_kl = easi.whiteness_kl

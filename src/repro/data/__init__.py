@@ -1,0 +1,3 @@
+from repro.data import mixtures, synthetic, waveform
+
+__all__ = ["mixtures", "synthetic", "waveform"]

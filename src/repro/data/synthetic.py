@@ -1,0 +1,69 @@
+"""Deterministic, restart-safe synthetic data streams for LM-scale runs.
+
+Every batch is a pure function of (seed, step, shard) — a job that restarts
+from a checkpoint at step k regenerates exactly the batches it would have
+seen, with no replay/skip bookkeeping.  Per-host sharding slices the global
+batch by data-parallel rank so multi-host launches read disjoint data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStreamConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # Markov-ish structure so losses are non-trivial (pure uniform tokens give
+    # a flat loss surface and hide optimizer bugs).
+    n_states: int = 64
+
+
+def token_batch(cfg: TokenStreamConfig, step: int, *, shard: int = 0, n_shards: int = 1) -> dict:
+    """Batch for `step`, restricted to data-parallel shard `shard`."""
+    assert cfg.global_batch % n_shards == 0
+    local = cfg.global_batch // n_shards
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step, shard]))
+    # Cheap structured stream: tokens follow a per-sequence random linear
+    # congruence over a small state space, embedded into the full vocab.
+    state0 = rng.integers(0, cfg.n_states, size=(local, 1))
+    mult = rng.integers(1, cfg.n_states, size=(local, 1)) * 2 + 1
+    add = rng.integers(0, cfg.n_states, size=(local, 1))
+    idx = np.arange(cfg.seq_len)[None, :]
+    states = (state0 + mult * idx + add * (idx ** 2)) % cfg.n_states
+    spread = rng.integers(0, max(1, cfg.vocab_size // cfg.n_states), size=(local, cfg.seq_len))
+    tokens = (states * max(1, cfg.vocab_size // cfg.n_states) + spread) % cfg.vocab_size
+    return {
+        "tokens": jnp.asarray(tokens, jnp.int32),
+        "step": jnp.asarray(step, jnp.int32),
+    }
+
+
+def feature_batch(
+    n_features: int, batch: int, step: int, seed: int = 0, *, shard: int = 0, n_shards: int = 1
+) -> jax.Array:
+    """Continuous feature stream (for DR front-end training), same contract."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, shard, 7]))
+    local = batch // n_shards
+    # Correlated features: random low-rank mixing of independent sources so
+    # that DR (whitening/ICA) has real structure to find.
+    k = max(2, n_features // 4)
+    s = rng.laplace(size=(local, k))
+    a = np.random.default_rng(seed).standard_normal((n_features, k))  # static mixing
+    x = s @ a.T + 0.1 * rng.standard_normal((local, n_features))
+    return jnp.asarray(x, jnp.float32)
+
+
+def stream(cfg: TokenStreamConfig, start_step: int = 0, *, shard: int = 0, n_shards: int = 1) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield token_batch(cfg, step, shard=shard, n_shards=n_shards)
+        step += 1

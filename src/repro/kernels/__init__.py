@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's contribution IS a datapath optimization, so this layer is real:
+  ternary_matmul  — int8 ternary RP matmul (HBM-traffic-optimal RP stage)
+  easi_update     — fused EASI relative-gradient + weight update
+  flash_attention — flash forward (causal/SWA/GQA); kills the S² softmax-tile
+                    HBM traffic that dominates T_mem in the roofline tables
+  ops             — jitted wrappers (interpret=True off-TPU)
+  ref             — pure-jnp oracles
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

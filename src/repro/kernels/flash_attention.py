@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: flash attention forward (causal / sliding-window / GQA).
+
+WHY (§Perf cell 2): the XLA-level flash implementation
+(`models.blocks.flash_attention`) materialises its (cq × ck) probability
+tiles in HBM — B·hq·S²·4 bytes per layer-pass, chunking-invariant, and the
+dominant memory term of every attention-bound cell.  This kernel keeps the
+running (acc, m, l) state and the score tile in VMEM across the innermost
+grid axis, so HBM traffic drops to O(q + k + v + out) — the S² term
+disappears.
+
+Tiling: grid (B·Hq, nq, nk) with the contraction (kv) axis innermost; VMEM
+scratch persists across the sequential innermost axis (TPU grid semantics).
+Block shapes are MXU-aligned: (cq, dh) × (ck, dh) tiles with dh padded to a
+multiple of 128 by the wrapper.  GQA maps q-head bh to kv-head bh // g in
+the k/v BlockSpec index maps — no repeated KV in HBM.
+
+Backward: the training path keeps the custom-VJP XLA implementation (exact
+same math; see blocks.flash_attention).  A Mosaic backward kernel is the
+natural next step and reuses this file's tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            cq: int, ck: int, nk: int, sq: int, skv: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # (cq, dh)
+    k = k_ref[0]                                   # (ck, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = q_offset + qi * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+    k_pos = ki * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+    mask = (k_pos < skv) & (q_pos < q_offset + sq)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (cq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                         # (cq, ck) f32
+    corr = jnp.exp(m_prev - m_new)                 # (cq, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_chunk", "kv_chunk", "q_offset", "interpret"))
+def flash_attention_fwd(
+    q: jax.Array,            # (B, Sq, Hq, Dh)
+    k: jax.Array,            # (B, Skv, Hkv, Dh)
+    v: jax.Array,            # (B, Skv, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+
+    cq = min(q_chunk, _round_up(sq, 8))
+    ck = min(kv_chunk, _round_up(skv, 128))
+    dh_p = _round_up(dh, 128)
+    sq_p, skv_p = _round_up(sq, cq), _round_up(skv, ck)
+    nq, nk = sq_p // cq, skv_p // ck
+
+    # head-major layout: q (B·Hq, Sq, Dh); k/v (B·Hkv, Skv, Dh)
+    qh = jnp.pad(q.transpose(0, 2, 1, 3).reshape(b * hq, sq, dh),
+                 ((0, 0), (0, sq_p - sq), (0, dh_p - dh)))
+    kh = jnp.pad(k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, dh),
+                 ((0, 0), (0, skv_p - skv), (0, dh_p - dh)))
+    vh = jnp.pad(v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, dh),
+                 ((0, 0), (0, skv_p - skv), (0, dh_p - dh)))
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        cq=cq, ck=ck, nk=nk, sq=sq, skv=skv, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, cq, dh_p), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, ck, dh_p), lambda bh, qi, ki, g=g: (bh // g, ki, 0)),
+            pl.BlockSpec((1, ck, dh_p), lambda bh, qi, ki, g=g: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cq, dh_p), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, dh_p), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((cq, dh_p), jnp.float32),
+            pltpu.VMEM((cq, 1), jnp.float32),
+            pltpu.VMEM((cq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    out = out[:, :sq, :dh].reshape(b, hq, sq, dh).transpose(0, 2, 1, 3)
+    return out

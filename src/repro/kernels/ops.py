@@ -1,0 +1,57 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in `interpret=True` mode — the kernel
+body executes in Python with the exact same tiling/indexing as on TPU, which
+is what the per-kernel allclose sweeps validate.  On a real TPU backend the
+same call sites compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import easi_update as _easi_kernel
+from repro.kernels import ternary_matmul as _tmm_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ternary_matmul(x, r_int8, *, scale: float = 1.0, block_m=128, block_p=128, block_k=512):
+    return _tmm_kernel.ternary_matmul(
+        x, r_int8, scale=scale, block_m=block_m, block_p=block_p, block_k=block_k,
+        interpret=_interpret(),
+    )
+
+
+def easi_apply(b_mat, y, cfg, *, block_m: int = 512):
+    """Apply one EASI update given precomputed outputs y (b, n)."""
+    if cfg.normalized:
+        # The normalized variant divides by data-dependent scalars; keep it on
+        # the XLA path (it is not the perf-critical datapath the paper builds).
+        from repro.core import easi as easi_mod
+
+        g = easi_mod.relative_gradient(y, cfg)
+        return b_mat - cfg.mu * (g @ b_mat)
+    return _easi_kernel.easi_apply(
+        b_mat, y,
+        mu=cfg.mu, second_order=cfg.second_order, higher_order=cfg.higher_order,
+        g_name=cfg.g, block_m=block_m, interpret=_interpret(),
+    )
+
+
+def easi_update(b_mat, h_block, cfg, *, block_m: int = 512):
+    """Full fused step: y = h Bᵀ (XLA matmul) then fused gradient+update."""
+    y = h_block.astype(b_mat.dtype) @ b_mat.T
+    return easi_apply(b_mat, y, cfg, block_m=block_m)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_chunk=512,
+                    kv_chunk=512, q_offset=0):
+    """Flash forward on TPU (Mosaic); interpret-mode elsewhere (tests)."""
+    from repro.kernels.flash_attention import flash_attention_fwd
+
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, q_chunk=q_chunk,
+        kv_chunk=kv_chunk, q_offset=q_offset, interpret=_interpret())

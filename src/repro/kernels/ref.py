@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ternary_matmul_ref(x: jax.Array, r_int8: jax.Array, *, scale: float = 1.0) -> jax.Array:
+    """y (b, p) = scale * x @ rᵀ with f32 accumulation."""
+    r = r_int8.astype(jnp.float32)
+    y = jax.lax.dot_general(
+        x.astype(jnp.float32), r,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    return y.astype(x.dtype)
+
+
+def easi_apply_ref(
+    b_mat: jax.Array,
+    y: jax.Array,
+    *,
+    mu: float,
+    second_order: bool = True,
+    higher_order: bool = True,
+    g_name: str = "cubic",
+) -> jax.Array:
+    """Reference EASI update: B − μ[(YᵀY/b − I)·so + (H − Hᵀ)·ho]B."""
+    y32 = y.astype(jnp.float32)
+    b = y32.shape[0]
+    n = y32.shape[1]
+    g_mat = jnp.zeros((n, n), jnp.float32)
+    if second_order:
+        g_mat += y32.T @ y32 / b - jnp.eye(n, dtype=jnp.float32)
+    if higher_order:
+        gy = {"cubic": lambda v: v ** 3,
+              "tanh": jnp.tanh,
+              "sign_cubic": lambda v: jnp.sign(v) * v * v}[g_name](y32)
+        h = gy.T @ y32 / b
+        g_mat += h - h.T
+    out = b_mat.astype(jnp.float32) - mu * (g_mat @ b_mat.astype(jnp.float32))
+    return out.astype(b_mat.dtype)

@@ -1,0 +1,9 @@
+"""Launch layer: production mesh, dry-run, roofline, drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+dedicated process (the CLI), never from tests or the library.
+"""
+
+from repro.launch import mesh, roofline  # dryrun intentionally not imported
+
+__all__ = ["mesh", "roofline"]

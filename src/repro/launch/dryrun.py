@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script builds the REAL jitted program (train_step with
+optimizer update / prefill / decode_step) against ShapeDtypeStruct inputs —
+no allocation — on the production mesh, compiles it through XLA's SPMD
+partitioner, and records:
+
+  * memory_analysis()   (proves the per-device footprint)
+  * cost_analysis()     (FLOPs / bytes for the roofline)
+  * collective schedule (parsed from post-partitioning HLO)
+  * the 3-term roofline report (launch.roofline)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi_6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single   # one mesh
+
+Per-cell JSON lands in experiments/dryrun/; existing files are skipped
+(delete to re-run) so the full sweep is resumable.
+"""
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.dist import sharding as shard_rules
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.train import optimizer as opt_mod
+from repro.train import train_step as ts_mod
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _sharded_bytes(tree, specs, mesh) -> float:
+    """Per-device bytes of a pytree under the given PartitionSpecs."""
+    total = 0.0
+    flat_t = jax.tree.leaves(tree)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    for leaf, spec in zip(flat_t, flat_s):
+        denom = 1
+        for ax in spec:
+            if ax is not None:
+                denom *= shard_rules.axis_size(mesh, ax)
+        total += leaf.size * leaf.dtype.itemsize / denom
+    return total
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, *, opt_override: Dict[str, Any] = None):
+    """Returns (lowered, model_flops, per_device_state_bytes, meta)."""
+    cfg = registry.get(arch_id)
+    if opt_override:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **opt_override)
+    cell = api.SHAPES[shape_name]
+    specs = api.input_specs(cfg, shape_name)
+    n_total, n_active = api.exact_param_counts(cfg)
+
+    if cell.kind == "train":
+        tcfg = ts_mod.TrainConfig(arch=cfg, opt=opt_mod.AdamWConfig(),
+                                  grad_accum=cfg.train_grad_accum)
+        state = jax.eval_shape(lambda: ts_mod.init_state(jax.random.PRNGKey(0), tcfg))
+        batch_like = specs["batch"]
+        with mesh:
+            step = ts_mod.make_train_step(tcfg, mesh, state, batch_like)
+            lowered = step.lower(state, batch_like)
+        sspec = ts_mod.state_specs(state, mesh)
+        state_bytes = _sharded_bytes(state, sspec, mesh)
+        tokens = cell.global_batch * cell.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif cell.kind == "prefill":
+        from repro.serve import serve_step
+        params = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+        with mesh:
+            fn = serve_step.make_prefill(cfg, mesh, params, specs["batch"], cell.seq_len)
+            lowered = fn.lower(params, specs["batch"])
+        state_bytes = _sharded_bytes(params, shard_rules.param_specs(params, mesh), mesh)
+        tokens = cell.global_batch * cell.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode
+        from repro.serve import serve_step
+        params = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+        cache = specs["cache"]
+        with mesh:
+            fn = serve_step.make_decode(cfg, mesh, params, cache)
+            lowered = fn.lower(params, specs["token"], cache)
+        state_bytes = (_sharded_bytes(params, shard_rules.param_specs(params, mesh), mesh)
+                       + _sharded_bytes(cache, shard_rules.cache_specs(cache, mesh), mesh))
+        model_flops = 2.0 * n_active * cell.global_batch
+
+    return lowered, model_flops, state_bytes, {"params": n_total,
+                                               "active_params": n_active}
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str, *, verbose=True,
+             opt_override: Dict[str, Any] = None, tag: str = "") -> Dict[str, Any]:
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    cfg = registry.get(arch_id)
+    ok, why = api.cell_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    lowered, model_flops, state_bytes, meta = build_cell(
+        arch_id, shape_name, mesh, opt_override=opt_override)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+    except Exception:
+        cost = None
+    hlo = compiled.as_text()
+    # archive the post-partitioning HLO so roofline-analyzer improvements can
+    # re-score cells without recompiling
+    hlo_dir = os.path.join(OUT_DIR, "..", "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    stem = f"{arch_id}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    with gzip.open(os.path.join(hlo_dir, stem + ".hlo.gz"), "wt") as f:
+        f.write(hlo)
+
+    report = roofline.analyze(
+        arch=arch_id, shape=shape_name, mesh_name=mesh_name, chips=chips,
+        cost=cost, hlo_text=hlo, model_flops=model_flops,
+        memory_analysis=mem, fallback_bytes=state_bytes * 2,
+    )
+    out = {
+        "status": "ok",
+        "lower_s": t_lower, "compile_s": t_compile,
+        "state_bytes_per_device": state_bytes,
+        "memory_analysis": str(mem) if mem is not None else None,
+        "hlo_n_lines": hlo.count("\n"),
+        **meta,
+        **report.to_json(),
+    }
+    if verbose:
+        print(f"[dryrun] {arch_id}/{shape_name}/{mesh_name}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"state {state_bytes/1e9:.2f} GB/dev "
+              f"dominant={report.dominant} bound={report.step_time_bound:.4f}s "
+              f"roofline={100*report.roofline_fraction:.1f}%")
+        if mem is not None:
+            print(f"[dryrun]   memory_analysis: {mem}")
+        print(f"[dryrun]   cost_analysis flops={report.hlo_flops:.3e} "
+              f"bytes={report.hlo_bytes:.3e} coll={report.collective_bytes:.3e}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default=OUT_DIR)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kv-rp", type=int, default=None,
+                    help="RP-compressed KV cache ratio (hillclimb variant)")
+    ap.add_argument("--tag", type=str, default="",
+                    help="suffix for output files (hillclimb variants)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": ["single"], "multi": ["multi"], "both": ["single", "multi"]}[args.mesh]
+
+    if args.all:
+        cells = [(a, s) for a in registry.ARCH_IDS for s in api.SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(registry.ALIASES.get(args.arch, args.arch), args.shape)]
+
+    override = {"kv_rp": args.kv_rp} if args.kv_rp else None
+    failures = []
+    for arch_id, shape_name in cells:
+        for mesh_name in meshes:
+            stem = f"{arch_id}__{shape_name}__{mesh_name}" + (f"__{args.tag}" if args.tag else "")
+            path = os.path.join(args.out, stem + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"[dryrun] skip existing {path}")
+                continue
+            try:
+                res = run_cell(arch_id, shape_name, mesh_name, opt_override=override,
+                               tag=args.tag)
+            except Exception as e:
+                traceback.print_exc()
+                res = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                       "status": "error", "error": f"{type(e).__name__}: {e}"}
+                failures.append((arch_id, shape_name, mesh_name))
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1, default=str)
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}")
+        raise SystemExit(1)
+    print("[dryrun] all requested cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh definition (assignment-mandated shapes).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  Single-pod: (data=16, model=16) = one v5e-256.
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the `pod` axis carries
+data parallelism across pods (gradient sync only, optionally RP-compressed
+— repro.dist.compress), `data` carries FSDP, `model` carries TP/EP/SP.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_devices: int = 1):
+    """Tiny mesh over whatever devices exist (tests)."""
+    n = min(n_devices, len(jax.devices()))
+    return jax.make_mesh((1, n), ("data", "model"))

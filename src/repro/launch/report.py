@@ -1,0 +1,100 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from the sweep JSONs.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+Prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def load(dir_):
+    by_key = {}
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    return by_key
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "n/a"
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(by_key):
+    rows = ["| arch | shape | mesh | status | compile s | state GB/dev | temp GB/dev | HLO lines |",
+            "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(by_key.items()):
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            rows.append(f"| {a} | {s} | {m} | {r['status']}: {reason} | | | | |")
+            continue
+        temp = None
+        if r.get("memory_analysis"):
+            import re
+            mm = re.search(r"temp_size_in_bytes=(\d+)", r["memory_analysis"])
+            temp = int(mm.group(1)) if mm else None
+        rows.append(
+            f"| {a} | {s} | {m} | ok | {r['compile_s']:.1f} | "
+            f"{fmt_bytes(r['state_bytes_per_device'])} | {fmt_bytes(temp)} | {r['hlo_n_lines']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(by_key, mesh="single"):
+    rows = ["| arch | shape | T_comp s | T_mem s | T_coll s | bound s | dominant | MF/HLO | roofline% | note |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(by_key.items()):
+        if m != mesh or r["status"] != "ok":
+            continue
+        note = ""
+        if r["sources"]["bytes"] == "analytic_fallback":
+            note = "bytes:analytic"
+        rows.append(
+            f"| {a} | {s} | {r['t_comp']:.4f} | {r['t_mem']:.4f} | {r['t_coll']:.4f} | "
+            f"{r['step_time_bound']:.4f} | {r['dominant']} | {r['flops_ratio']:.3f} | "
+            f"{100*r['roofline_fraction']:.1f} | {note} |")
+    return "\n".join(rows)
+
+
+def collectives_summary(by_key, mesh="single"):
+    rows = ["| arch | shape | all-reduce GB | all-gather GB | reduce-scatter GB | all-to-all GB | permute GB |",
+            "|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(by_key.items()):
+        if m != mesh or r["status"] != "ok":
+            continue
+        bk = r["collectives"]["bytes_by_kind"]
+        g = lambda k: f"{bk.get(k, 0)/1e9:.3f}"
+        rows.append(f"| {a} | {s} | {g('all-reduce')} | {g('all-gather')} | "
+                    f"{g('reduce-scatter')} | {g('all-to-all')} | {g('collective-permute')} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                                                  "experiments", "dryrun"))
+    args = ap.parse_args()
+    by_key = load(args.dir)
+    n_ok = sum(1 for r in by_key.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in by_key.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in by_key.values() if r["status"] == "error")
+    print(f"### Dry-run matrix ({n_ok} ok / {n_skip} skipped / {n_err} error)\n")
+    print(dryrun_table(by_key))
+    print("\n### Roofline (single-pod 16×16)\n")
+    print(roofline_table(by_key, "single"))
+    print("\n### Roofline (multi-pod 2×16×16)\n")
+    print(roofline_table(by_key, "multi"))
+    print("\n### Collective wire bytes per device-step (single-pod)\n")
+    print(collectives_summary(by_key, "single"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Re-score dry-run cells from archived HLO (no recompilation).
+
+Usage: PYTHONPATH=src python -m repro.launch.rescore
+Reads experiments/hlo/*.hlo.gz + the matching dryrun JSON (for model_flops
+and memory stats), recomputes the roofline terms with the current analyzer,
+and rewrites the JSON in place.
+"""
+
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+from repro.launch import roofline
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments")
+
+
+def main():
+    for hpath in sorted(glob.glob(os.path.join(BASE, "hlo", "*.hlo.gz"))):
+        stem = os.path.basename(hpath).replace(".hlo.gz", "")
+        jpath = os.path.join(BASE, "dryrun", stem + ".json")
+        if not os.path.exists(jpath):
+            continue
+        with open(jpath) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        report = roofline.analyze(
+            arch=r["arch"], shape=r["shape"], mesh_name=r["mesh"], chips=r["chips"],
+            cost=None, hlo_text=hlo, model_flops=r["model_flops"],
+            memory_analysis=None, fallback_bytes=r["state_bytes_per_device"] * 2,
+        )
+        upd = report.to_json()
+        upd["memory_per_device"] = r.get("memory_per_device")
+        r.update(upd)
+        with open(jpath, "w") as f:
+            json.dump(r, f, indent=1, default=str)
+        print(f"rescored {stem}: dominant={report.dominant} "
+              f"bound={report.step_time_bound:.4f}s roofline={100*report.roofline_fraction:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

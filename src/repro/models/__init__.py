@@ -1,0 +1,4 @@
+from repro.models import api, blocks, config, mlp, rwkv6, ssm, transformer
+from repro.models.config import ArchConfig
+
+__all__ = ["api", "blocks", "config", "mlp", "rwkv6", "ssm", "transformer", "ArchConfig"]

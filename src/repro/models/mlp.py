@@ -1,0 +1,77 @@
+"""The paper's downstream head: MLP with two hidden layers (§V-B, 64 units).
+
+Pure-pytree init/apply/fit; used by the two-stage pipeline and the Fig. 1
+accuracy-vs-dimensionality benchmark.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt
+
+
+def init(key: jax.Array, d_in: int, hidden: Sequence[int], n_classes: int) -> Dict:
+    dims = [d_in, *hidden, n_classes]
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (a, b), jnp.float32) * jnp.sqrt(2.0 / a)
+        params.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
+    return {"layers": params}
+
+
+def apply(params: Dict, x: jax.Array) -> jax.Array:
+    h = x
+    layers = params["layers"]
+    for i, lyr in enumerate(layers):
+        h = h @ lyr["w"] + lyr["b"]
+        if i < len(layers) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(params: Dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    logits = apply(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def fit(
+    params: Dict, x: jax.Array, y: jax.Array, *,
+    lr: float = 5e-4, wd: float = 1e-2, epochs: int = 60, batch: int = 128, key: jax.Array,
+) -> Dict:
+    cfg = opt.AdamWConfig(lr=lr, grad_clip=None, weight_decay=wd)
+    state = opt.init(params)
+    n = x.shape[0]
+    steps_per_epoch = max(1, n // batch)
+
+    @jax.jit
+    def epoch(carry, perm):
+        params, state = carry
+
+        def step(carry, idx):
+            params, state = carry
+            xb = jnp.take(x, idx, axis=0)
+            yb = jnp.take(y, idx, axis=0)
+            g = jax.grad(loss_fn)(params, xb, yb)
+            params, state, _ = opt.apply_updates(params, g, state, cfg)
+            return (params, state), None
+
+        idxs = perm[: steps_per_epoch * batch].reshape(steps_per_epoch, batch)
+        (params, state), _ = jax.lax.scan(step, (params, state), idxs)
+        return (params, state), None
+
+    carry = (params, state)
+    for e in range(epochs):
+        key, k = jax.random.split(key)
+        perm = jax.random.permutation(k, n)
+        carry, _ = epoch(carry, perm)
+    return carry[0]
+
+
+def accuracy(params: Dict, x: jax.Array, y: jax.Array) -> float:
+    return float(jnp.mean((jnp.argmax(apply(params, x), -1) == y).astype(jnp.float32)))

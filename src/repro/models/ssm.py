@@ -1,0 +1,428 @@
+"""Mamba-2 (SSD) blocks + the Zamba-2 hybrid (arXiv:2411.15242).
+
+Zamba-2: a Mamba-2 backbone (81 layers for the 7B) with ONE shared
+attention+MLP block applied every `attn_every` layers; the shared block reads
+concat(x_layer, x_embed) (2·d_model) — weight sharing keeps param count down
+while giving periodic global mixing.  Deltas vs the released model
+(documented): per-application LoRAs on the shared block omitted; rotary
+applied inside the shared block; n_groups=1 for B/C projections.
+
+State spaces make decode O(1) in sequence length (state pytree instead of a
+KV cache except the shared block's own small KV), which is why this arch
+runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.config import ArchConfig
+
+PyTree = Any
+SSD_CHUNK = 64  # block-form chunk length (tests may override)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    ds = ssm.d_state
+    ks = jax.random.split(key, 6)
+    conv_ch = di + 2 * ds
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "in_proj": blocks.dense_init(ks[0], d, 2 * di + 2 * ds + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (ssm.d_conv, 1, conv_ch), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "norm_y": jnp.ones((di,), dtype),
+        "out_proj": blocks.dense_init(ks[2], di, d, dtype,
+                                      scale=1.0 / math.sqrt(2 * cfg.n_layers * di)),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv1d. x (B,S,C), w (K,1,C). Returns (y, new_state)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)                    # (B, K-1, C)
+    xin = jnp.concatenate([pad, x], axis=1)
+    y = jax.lax.conv_general_dilated(
+        xin, w.astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[2])
+    new_state = xin[:, -(k - 1):, :]
+    return jax.nn.silu(y + b.astype(x.dtype)), new_state
+
+
+def mamba_block(lp, x, cfg: ArchConfig, ssm_state, conv_state):
+    """x (B,S,d) -> (y (B,S,d), new ssm_state (B,nh,dh,ds), new conv_state)."""
+    ssm = cfg.ssm
+    b, s, d = x.shape
+    di, nh, ds, dh = ssm.d_inner(d), ssm.n_heads(d), ssm.d_state, ssm.head_dim
+
+    from repro.dist.sharding import constrain as _pin
+
+    h = blocks.rms_norm(x, lp["ln"], cfg.norm_eps)
+    # gather the d-sharded carry ONCE (bf16) so in_proj is a local matmul;
+    # without this every projection psums f32 partial sums (§Perf: 6×470 MB
+    # all-reduce per layer -> one 470 MB all-gather)
+    h = _pin(h, "batch", None, None)
+    zxbcdt = h @ lp["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+    # pin channel sharding on the wide projection products (the (B,S,14k)
+    # tensors otherwise replicate around the depthwise conv + scan)
+    z = _pin(z, "batch", None, "model")
+    xbc = _pin(xbc, "batch", None, "model")
+    xbc, conv_state = _causal_conv(xbc, lp["conv_w"], lp["conv_b"], conv_state)
+    xbc = _pin(xbc, "batch", None, "model")
+    xs, bmat, cmat = jnp.split(xbc, [di, di + ds], axis=-1)
+
+    from repro.dist.sharding import constrain
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))  # (B,S,nh)
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))                                     # (nh,)
+    decay = jnp.exp(dt * a)                                                            # (B,S,nh)
+    # Pin head-sharded layout on the recurrence operands (see rwkv6 note).
+    dt = constrain(dt, "batch", None, "model")
+    decay = constrain(decay, "batch", None, "model")
+    xh = constrain(xs.reshape(b, s, nh, dh), "batch", None, "model", None)
+    bmat32 = constrain(bmat, "batch", None, None)
+    cmat32 = constrain(cmat, "batch", None, None)
+    ssm_state = constrain(ssm_state, "batch", "model", None, None)
+
+    def step(state, inp):
+        x_t, b_t, c_t, dec_t, dt_t = inp  # (B,nh,dh), (B,ds), (B,ds), (B,nh), (B,nh)
+        # x/B/C arrive in compute dtype (bf16); state + dt/decay stay f32
+        upd = jnp.einsum("bhd,bn->bhdn", x_t.astype(jnp.float32) * dt_t[..., None],
+                         b_t, preferred_element_type=jnp.float32)
+        state = state * dec_t[..., None, None] + upd
+        y_t = jnp.einsum("bhdn,bn->bhd", state, c_t.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        return state, y_t.astype(x_t.dtype)
+
+    # Block-form SSD (Mamba-2's chunked algorithm, §Perf): within a chunk of
+    # T steps the recurrence is evaluated with MXU matmuls —
+    #   intra:  y_t += Σ_{s≤t} (c_t·b_s)·exp(ℓ_t−ℓ_s)·dt_s·x_s
+    #   carry:  y_t += (c_t·h_in)·exp(ℓ_t);  h_out = exp(ℓ_T)h_in + Σ_s …
+    # with ℓ = cumsum(dt·a) (log-space; all exponents ≤ 0 ⇒ stable).  The
+    # (B,nh,dh,ds) state crosses HBM once per CHUNK instead of once per step
+    # (64× less recurrence traffic than the flat scan), and the per-step
+    # outer products become (T×T)·(T×dh) matmuls.
+    if s % SSD_CHUNK == 0 and s > 1:
+        t_c = SSD_CHUNK
+        nch = s // t_c
+        a_dt = dt * a                                           # (B,S,nh), ≤ 0
+        lseg = jnp.cumsum(a_dt.reshape(b, nch, t_c, nh), axis=2)
+
+        def to_chunks(t):
+            return t.reshape((b, nch, t_c) + t.shape[2:]).transpose(
+                (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+        xs_c = (to_chunks(xh), to_chunks(bmat32), to_chunks(cmat32),
+                to_chunks(dt), lseg.transpose(1, 0, 2, 3))
+
+        @jax.checkpoint
+        def chunk_body(h, inp):
+            xc, bc, cc, dtc, lc = inp       # (B,T,nh,dh),(B,T,ds),(B,T,ds),(B,T,nh),(B,T,nh)
+            xc32 = xc.astype(jnp.float32)
+            bc32 = bc.astype(jnp.float32)
+            cc32 = cc.astype(jnp.float32)
+            # carry-in contribution
+            y_in = jnp.einsum("btn,bhdn->bthd", cc32, h) * jnp.exp(lc)[..., None]
+            # intra-chunk quasi-attention
+            cb = jnp.einsum("btn,bsn->bts", cc32, bc32)         # shared across heads
+            ldiff = lc[:, :, None, :] - lc[:, None, :, :]        # (B,T,S,nh)
+            causal = (jnp.arange(t_c)[:, None] >= jnp.arange(t_c)[None, :])
+            m = jnp.exp(jnp.where(causal[None, :, :, None], ldiff, -jnp.inf))
+            m = m * cb[..., None]                                # (B,T,S,nh)
+            xdt = xc32 * dtc[..., None]                          # (B,S,nh,dh)
+            y_intra = jnp.einsum("btsn,bsnd->btnd", m, xdt)
+            # state carry-out: h (B,nh,dh,ds); exp(ℓ_T) is (B,nh)
+            w_end = jnp.exp(lc[:, -1:, :] - lc) * dtc            # (B,S,nh)
+            h_new = h * jnp.exp(lc[:, -1, :])[:, :, None, None]
+            h_new = h_new + jnp.einsum("bsnd,bsn,bsm->bndm", xc32, w_end, bc32)
+            y = (y_in + y_intra).astype(xc.dtype)                # (B,T,nh,dh)
+            return h_new, y
+
+        ssm_state, ys = jax.lax.scan(chunk_body, ssm_state, xs_c)
+        ys = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, dh)
+        y = ys + lp["d_skip"].astype(jnp.float32)[None, None, :, None].astype(ys.dtype) * xh
+        y = y.reshape(b, s, di).astype(x.dtype)
+        y = blocks.rms_norm(y, lp["norm_y"], cfg.norm_eps) * jax.nn.silu(z)
+        return y @ lp["out_proj"], ssm_state, conv_state
+    else:
+        xs_t = (xh.transpose(1, 0, 2, 3), bmat32.transpose(1, 0, 2),
+                cmat32.transpose(1, 0, 2), decay.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+        ssm_state, ys = jax.lax.scan(step, ssm_state, xs_t)
+    y = ys.transpose(1, 0, 2, 3) + lp["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = blocks.rms_norm(y, lp["norm_y"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ lp["out_proj"], ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba-2 hybrid model
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> PyTree:
+    cfg.validate()
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, dh = cfg.d_model, cfg.dh
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    v = cfg.padded_vocab
+    k_embed, k_layers, k_shared, k_head = jax.random.split(key, 4)
+
+    shared_ks = jax.random.split(k_shared, 8)
+    shared = {
+        "ln1": jnp.ones((2 * d,), dtype), "ln2": jnp.ones((2 * d,), dtype),
+        "wq": blocks.dense_init(shared_ks[0], 2 * d, hq * dh, dtype),
+        "wk": blocks.dense_init(shared_ks[1], 2 * d, hkv * dh, dtype),
+        "wv": blocks.dense_init(shared_ks[2], 2 * d, hkv * dh, dtype),
+        "wo": blocks.dense_init(shared_ks[3], hq * dh, d, dtype),
+        "w_in": blocks.dense_init(shared_ks[4], 2 * d, cfg.d_ff, dtype),
+        "w_gate": blocks.dense_init(shared_ks[5], 2 * d, cfg.d_ff, dtype),
+        "w_out": blocks.dense_init(shared_ks[6], cfg.d_ff, d, dtype),
+    }
+    return {
+        "embed": blocks.dense_init(k_embed, v, d, dtype, scale=1.0),
+        "layers": blocks.stacked(
+            lambda i: mamba_init(jax.random.fold_in(k_layers, i), cfg, dtype), cfg.n_layers),
+        "shared": shared,
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": blocks.dense_init(k_head, d, v, dtype),
+    }
+
+
+def n_shared_slots(cfg: ArchConfig) -> int:
+    return -(-cfg.n_layers // cfg.hybrid.attn_every)
+
+
+def _shared_attn_train(sp, x, x0, cfg, positions):
+    from repro.dist.sharding import constrain
+
+    b, s, d = x.shape
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = blocks.rms_norm(cat, sp["ln1"], cfg.norm_eps)
+    h = constrain(h, "batch", None, None)   # gather once; local projections
+    q = (h @ sp["wq"]).reshape(b, s, cfg.n_heads, cfg.dh)
+    k = (h @ sp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.dh)
+    vv = (h @ sp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.dh)
+    q = blocks.apply_rope(q, positions, cfg.rope_theta)
+    k = blocks.apply_rope(k, positions, cfg.rope_theta)
+    attn = blocks.flash_attention(q, k, vv, causal=True, window=cfg.sliding_window,
+                                  q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    x = x + attn.reshape(b, s, -1) @ sp["wo"]
+    cat2 = jnp.concatenate([x, x0], axis=-1)
+    h2 = blocks.rms_norm(cat2, sp["ln2"], cfg.norm_eps)
+    h2 = constrain(h2, "batch", None, None)
+    y = blocks.act_fn(cfg.act)(h2 @ sp["w_gate"]) * (h2 @ sp["w_in"])
+    return x + y @ sp["w_out"], (k, vv)
+
+
+def hidden_states(params: PyTree, batch: Dict[str, jax.Array], cfg: ArchConfig,
+                  *, remat: bool = True):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cast = lambda t: jax.tree.map(lambda a: a.astype(cdt) if a.dtype == jnp.float32 and a.ndim >= 2 else a, t)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+    b, s, d = x.shape
+    ssm = cfg.ssm
+    nh, dh_m, ds = ssm.n_heads(d), ssm.head_dim, ssm.d_state
+    positions = jnp.arange(s)[None, :]
+    shared = cast(params["shared"])
+    every = cfg.hybrid.attn_every
+
+    from repro.dist.sharding import constrain
+
+    def body(carry, inp):
+        x, x0 = carry
+        lp, idx = inp
+        # Feature-sharded residual carry (d over `model`): the time-scan
+        # recurrence needs the full sequence locally, so SP-on-S is not an
+        # option here; sharding d bounds the 81-layer remat-residual stack.
+        x = constrain(x, "batch", None, "model")
+        x0 = constrain(x0, "batch", None, "model")
+        st0 = jnp.zeros((b, nh, dh_m, ds), jnp.float32)
+        y, _, _ = mamba_block(lp, x, cfg, st0, None)
+        x = x + y
+        use_attn = (idx % every) == 0
+        x = jax.lax.cond(
+            use_attn,
+            lambda x_: _shared_attn_train(shared, x_, x0, cfg, positions)[0],
+            lambda x_: x_,
+            x)
+        # pin the CARRY layout (what the remat scan saves per layer)
+        x = constrain(x, "batch", None, "model")
+        return (x, x0), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    # bf16 cast outside the scan -> FSDP re-gathers move bf16 (§Perf)
+    (x, _), _ = jax.lax.scan(body_fn, (x, x), (cast(params["layers"]), jnp.arange(cfg.n_layers)))
+    x = blocks.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, {}
+
+
+def forward(params: PyTree, batch: Dict[str, jax.Array], cfg: ArchConfig,
+            *, remat: bool = True):
+    x, aux = hidden_states(params, batch, cfg, remat=remat)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = (x @ params["lm_head"].astype(cdt)).astype(jnp.float32)
+    return logits, aux
+
+
+def loss_fn(params: PyTree, batch: Dict[str, jax.Array], cfg: ArchConfig, *, remat: bool = True):
+    x, aux = hidden_states(params, batch, cfg, remat=remat)
+    targets = batch["tokens"][:, 1:]
+    loss = blocks.chunked_softmax_xent(x[:, :-1], params["lm_head"], targets)
+    return loss, {"ce": loss}
+
+
+# ---------------------------------------------------------------------------
+# serving: states + shared-block KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, cache_size: int, dtype=jnp.bfloat16) -> PyTree:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    nh, dh_m, ds = ssm.n_heads(d), ssm.head_dim, ssm.d_state
+    slots = n_shared_slots(cfg)
+    win = cfg.sliding_window
+    keep = min(cache_size, win) if win else cache_size
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, nh, dh_m, ds), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, ssm.d_conv - 1, ssm.d_inner(d) + 2 * ds), dtype),
+        "k": jnp.zeros((slots, batch, keep, cfg.n_kv_heads, cfg.dh), dtype),
+        "v": jnp.zeros((slots, batch, keep, cfg.n_kv_heads, cfg.dh), dtype),
+        "len": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: PyTree, batch: Dict[str, jax.Array], cfg: ArchConfig, cache_size: int):
+    """Prompt pass that also builds states/caches (scan-over-layers)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cast = lambda t: jax.tree.map(lambda a: a.astype(cdt) if a.dtype == jnp.float32 and a.ndim >= 2 else a, t)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+    b, s, d = x.shape
+    ssm = cfg.ssm
+    nh, dh_m, ds = ssm.n_heads(d), ssm.head_dim, ssm.d_state
+    positions = jnp.arange(s)[None, :]
+    shared = cast(params["shared"])
+    every = cfg.hybrid.attn_every
+    win = cfg.sliding_window
+    keep = min(cache_size, win) if win else cache_size
+
+    def body(carry, inp):
+        x, x0 = carry
+        lp, idx = inp
+        lp = cast(lp)
+        st0 = jnp.zeros((b, nh, dh_m, ds), jnp.float32)
+        y, ssm_st, conv_st = mamba_block(lp, x, cfg, st0, None)
+        x = x + y
+
+        def with_attn(x_):
+            x2, (k, vv) = _shared_attn_train(shared, x_, x0, cfg, positions)
+            return x2, k, vv
+
+        def no_attn(x_):
+            z = jnp.zeros((b, s, cfg.n_kv_heads, cfg.dh), cdt)
+            return x_, z, z
+
+        x, k, vv = jax.lax.cond((idx % every) == 0, with_attn, no_attn, x)
+        k_keep = k[:, -keep:] if s >= keep else jnp.pad(k, ((0, 0), (0, keep - s), (0, 0), (0, 0)))
+        v_keep = vv[:, -keep:] if s >= keep else jnp.pad(vv, ((0, 0), (0, keep - s), (0, 0), (0, 0)))
+        return (x, x0), (ssm_st, conv_st, k_keep, v_keep)
+
+    (x, _), (ssm_states, conv_states, ks, vs) = jax.lax.scan(
+        body, (x, x), (params["layers"], jnp.arange(cfg.n_layers)))
+    x = blocks.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cdt)).astype(jnp.float32)
+    every_idx = jnp.arange(0, cfg.n_layers, every)
+    cache = {
+        "ssm": ssm_states, "conv": conv_states.astype(cdt),
+        "k": ks[every_idx].astype(cdt), "v": vs[every_idx].astype(cdt),
+        "len": jnp.full((), min(s, keep), jnp.int32),
+        "pos": jnp.full((), s, jnp.int32),
+    }
+    return logits[:, 0], cache
+
+
+def decode_step(params: PyTree, token: jax.Array, cache: PyTree, cfg: ArchConfig):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cast = lambda t: jax.tree.map(lambda a: a.astype(cdt) if a.dtype == jnp.float32 and a.ndim >= 2 else a, t)
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(cdt)
+    b = x.shape[0]
+    d = cfg.d_model
+    shared = cast(params["shared"])
+    every = cfg.hybrid.attn_every
+    s_max = cache["k"].shape[2]
+    slot = jnp.where(cache["len"] < s_max, cache["len"], cache["pos"] % s_max)
+    positions = jnp.full((b, 1), cache["pos"], jnp.int32)
+    x0 = x
+
+    def body(carry, inp):
+        x, slot_i = carry
+        lp, ssm_st, conv_st, k_c, v_c, idx = inp
+        lp = cast(lp)
+        y, ssm_st, conv_st = mamba_block(lp, x, cfg, ssm_st, conv_st)
+        x = x + y
+
+        def with_attn(args):
+            x_, k_c, v_c = args
+            cat = jnp.concatenate([x_, x0], axis=-1)
+            h = blocks.rms_norm(cat, shared["ln1"], cfg.norm_eps)
+            q = (h @ shared["wq"]).reshape(b, 1, cfg.n_heads, cfg.dh)
+            k = (h @ shared["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
+            vv = (h @ shared["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.dh)
+            q = blocks.apply_rope(q, positions, cfg.rope_theta)
+            k = blocks.apply_rope(k, positions, cfg.rope_theta)
+            k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype), (0, slot, 0, 0))
+            v_c = jax.lax.dynamic_update_slice(v_c, vv.astype(v_c.dtype), (0, slot, 0, 0))
+            new_len = jnp.minimum(cache["len"] + 1, s_max)
+            attn = blocks.decode_attention(q, k_c, v_c, new_len, window=cfg.sliding_window)
+            x2 = x_ + attn.reshape(b, 1, -1) @ shared["wo"]
+            cat2 = jnp.concatenate([x2, x0], axis=-1)
+            h2 = blocks.rms_norm(cat2, shared["ln2"], cfg.norm_eps)
+            yy = blocks.act_fn(cfg.act)(h2 @ shared["w_gate"]) * (h2 @ shared["w_in"])
+            return x2 + yy @ shared["w_out"], k_c, v_c
+
+        def no_attn(args):
+            x_, k_c, v_c = args
+            return x_, k_c, v_c
+
+        x, k_c, v_c = jax.lax.cond((idx % every) == 0, with_attn, no_attn, (x, k_c, v_c))
+        return (x, slot_i), (ssm_st, conv_st, k_c, v_c)
+
+    # Expand shared KV slots to a per-layer view for the scan, then fold back.
+    every_idx = jnp.arange(0, cfg.n_layers, every)
+    slot_of_layer = jnp.arange(cfg.n_layers) // every
+    k_per_layer = cache["k"][slot_of_layer]
+    v_per_layer = cache["v"][slot_of_layer]
+    (x, _), (ssm_states, conv_states, ks, vs) = jax.lax.scan(
+        body, (x, slot),
+        (params["layers"], cache["ssm"], cache["conv"], k_per_layer, v_per_layer,
+         jnp.arange(cfg.n_layers)))
+    x = blocks.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["lm_head"].astype(cdt)).astype(jnp.float32)
+    new_cache = {
+        "ssm": ssm_states, "conv": conv_states,
+        "k": ks[every_idx], "v": vs[every_idx],
+        "len": jnp.minimum(cache["len"] + 1, s_max),
+        "pos": cache["pos"] + 1,
+    }
+    return logits, new_cache

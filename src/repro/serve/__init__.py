@@ -1,0 +1,3 @@
+from repro.serve import serve_step
+
+__all__ = ["serve_step"]

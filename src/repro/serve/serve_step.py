@@ -1,0 +1,67 @@
+"""Sharded serving steps: prefill + decode with explicit cache shardings.
+
+Decode donates the cache (in-place KV update on device); batch shards over
+(pod, data), cache sequence over `model` (SP) per repro.dist.sharding rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shard_rules
+from repro.models import api
+from repro.models.config import ArchConfig
+
+PyTree = Any
+
+
+def _to_sh(spec, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_prefill(cfg: ArchConfig, mesh: Mesh, params_like: PyTree,
+                 batch_like: PyTree, cache_size: int):
+    pspec = shard_rules.param_specs(params_like, mesh)
+    bspec = shard_rules.train_batch_specs(batch_like, mesh)
+    cache_like = jax.eval_shape(
+        lambda: api.init_cache(cfg, jax.tree.leaves(batch_like)[0].shape[0], cache_size))
+    cspec = shard_rules.cache_specs(cache_like, mesh)
+
+    def fn(params, batch):
+        return api.prefill(params, batch, cfg, cache_size)
+
+    return jax.jit(
+        fn,
+        in_shardings=(_to_sh(pspec, mesh), _to_sh(bspec, mesh)),
+        out_shardings=(NamedSharding(mesh, P(shard_rules.batch_axes(mesh))),
+                       _to_sh(cspec, mesh)),
+    )
+
+
+def make_decode(cfg: ArchConfig, mesh: Mesh, params_like: PyTree, cache_like: PyTree):
+    pspec = shard_rules.param_specs(params_like, mesh)
+    cspec = shard_rules.cache_specs(cache_like, mesh)
+    b = None
+    for leaf in jax.tree.leaves(cache_like):
+        if leaf.ndim >= 2:
+            b = leaf.shape[1]
+            break
+    ax = shard_rules.batch_axes(mesh)
+    tok_spec = P(ax) if b is not None and b % shard_rules.axis_size(mesh, ax) == 0 else P()
+
+    def fn(params, token, cache):
+        return api.decode_step(params, token, cache, cfg)
+
+    return jax.jit(
+        fn,
+        in_shardings=(_to_sh(pspec, mesh), NamedSharding(mesh, tok_spec),
+                      _to_sh(cspec, mesh)),
+        out_shardings=(NamedSharding(mesh, tok_spec), _to_sh(cspec, mesh)),
+        donate_argnums=(2,),
+    )

@@ -1,0 +1,3 @@
+from repro.train import optimizer
+
+__all__ = ["optimizer"]

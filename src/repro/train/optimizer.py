@@ -1,0 +1,110 @@
+"""Optimizers (pure-pytree, optax-free) + LR schedules.
+
+AdamW with decoupled weight decay; state is a pytree of (m, v) matching the
+param tree, so it shards identically to params under the FSDP rules
+(`repro.dist.sharding`) and checkpoints through the same manager.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+    # Schedule: linear warmup -> cosine decay to lr*min_ratio over total_steps.
+    warmup_steps: int = 0
+    total_steps: int = 0          # 0 => constant lr after warmup
+    min_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array   # int32
+    m: PyTree
+    v: PyTree
+
+
+def init(params: PyTree) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(1.0, (s + 1.0) / cfg.warmup_steps)
+    else:
+        warm = 1.0
+    if cfg.total_steps > 0:
+        t = jnp.clip((s - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        cos = cfg.min_ratio + (1.0 - cfg.min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    else:
+        cos = 1.0
+    return lr * warm * cos
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(
+    params: PyTree, grads: PyTree, state: OptState, cfg: AdamWConfig,
+    *, decay_mask: Optional[PyTree] = None,
+) -> Tuple[PyTree, OptState, dict]:
+    """AdamW step. decay_mask: pytree of bools — True => apply weight decay."""
+    if cfg.grad_clip is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = schedule(cfg, state.step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, decay):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + jnp.where(decay, cfg.weight_decay, 0.0) * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    if decay_mask is None:
+        # default: decay every tensor with ndim >= 2 (skip norms/biases)
+        decay_mask = jax.tree.map(lambda p: p.ndim >= 2, params)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_d = treedef.flatten_up_to(decay_mask)
+    out = [upd(p, g, m, v, d) for p, g, m, v, d in zip(flat_p, flat_g, flat_m, flat_v, flat_d)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(step=step, m=new_m, v=new_v), metrics

@@ -1,0 +1,187 @@
+"""Sharded train step factory: loss → grad → AdamW, remat+scan, grad-accum,
+optional DR-frontend co-training and cross-pod RP gradient compression."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import dr_unit, easi as easi_mod
+from repro.dist import compress as compress_mod
+from repro.dist import sharding as shard_rules
+from repro.models import api
+from repro.models.config import ArchConfig
+from repro.train import optimizer as opt_mod
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    arch: ArchConfig
+    opt: opt_mod.AdamWConfig = opt_mod.AdamWConfig()
+    remat: bool = True
+    grad_accum: int = 1
+    grad_compress: Optional[compress_mod.CompressConfig] = None
+    seed: int = 0
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: opt_mod.OptState
+    dr: Optional[dr_unit.DRState]    # DR front-end (EASI-trained, not SGD)
+    step: jax.Array
+
+
+def _dr_cfg(arch: ArchConfig) -> Optional[dr_unit.DRConfig]:
+    spec = arch.dr_frontend
+    if spec is None:
+        return None
+    return dr_unit.DRConfig(
+        kind=spec.kind, m=arch.frontend_dim, p=spec.p, n=spec.n,
+        mu=spec.mu, block_size=1, bypass_whitening=spec.bypass_whitening)
+
+
+def init_state(key: jax.Array, cfg: TrainConfig) -> TrainState:
+    k_model, k_dr = jax.random.split(key)
+    params = api.init_params(k_model, cfg.arch)
+    dcfg = _dr_cfg(cfg.arch)
+    dr = dr_unit.init(k_dr, dcfg) if dcfg is not None else None
+    return TrainState(params=params, opt=opt_mod.init(params), dr=dr,
+                      step=jnp.zeros((), jnp.int32))
+
+
+def state_specs(state: TrainState, mesh: Mesh) -> TrainState:
+    pspec = shard_rules.param_specs(state.params, mesh)
+    ospec = opt_mod.OptState(step=P(), m=pspec, v=pspec)
+    drspec = None
+    if state.dr is not None:
+        drspec = dr_unit.DRState(r=P(), b=P(), steps=P())
+    return TrainState(params=pspec, opt=ospec, dr=drspec, step=P())
+
+
+def _dr_normalize(flat: jax.Array) -> jax.Array:
+    """Centre + one global scalar scale (the pipeline's DR-stage convention);
+    keeps the cubic EASI update in its stable regime for any feature scale."""
+    mean = jnp.mean(flat, axis=0)
+    scale = jnp.sqrt(jnp.mean(jnp.var(flat - mean, axis=0))) + 1e-8
+    return (flat - mean) / scale
+
+
+def _apply_dr_frontend(state_dr, dcfg, batch):
+    """Transform frontend features through the DR unit (stop-grad on DR)."""
+    if state_dr is None:
+        return batch
+    key = "frames" if "frames" in batch else "patches"
+    feats = batch[key]
+    b, s, fd = feats.shape
+    flat = _dr_normalize(feats.reshape(b * s, fd))
+    red = dr_unit.transform(
+        jax.tree.map(jax.lax.stop_gradient, state_dr), dcfg, flat)
+    return {**batch, key: red.reshape(b, s, -1)}
+
+
+def make_loss(cfg: TrainConfig, dcfg):
+    def loss(params, dr, batch):
+        batch = _apply_dr_frontend(dr, dcfg, batch)
+        return api.loss_fn(params, batch, cfg.arch, remat=cfg.remat)
+    return loss
+
+
+def make_train_step(cfg: TrainConfig, mesh: Mesh, state: TrainState,
+                    batch_like: PyTree):
+    """Returns jit(train_step) with explicit in/out shardings on `mesh`."""
+    dcfg = _dr_cfg(cfg.arch)
+    loss_fn = make_loss(cfg, dcfg)
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        if cfg.grad_accum > 1:
+            def micro(carry, mb):
+                (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, state.dr, mb)
+                acc = jax.tree.map(jnp.add, carry[0], g)
+                return (acc, carry[1] + l), None
+
+            micro_batches = jax.tree.map(
+                lambda a: a.reshape((cfg.grad_accum, a.shape[0] // cfg.grad_accum) + a.shape[1:]),
+                batch)
+            zero = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), state.params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zero, 0.0), micro_batches)
+            grads = jax.tree.map(lambda g: g / cfg.grad_accum, gsum)
+            loss = lsum / cfg.grad_accum
+            aux = {}
+        else:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, state.dr, batch)
+
+        params, opt_state, metrics = opt_mod.apply_updates(
+            state.params, grads, state.opt, cfg.opt)
+
+        # DR front-end: streaming EASI update on this batch's raw features
+        dr = state.dr
+        if dr is not None:
+            key = "frames" if "frames" in batch else "patches"
+            feats = _dr_normalize(batch[key].reshape(-1, cfg.arch.frontend_dim))
+            dr = dr_unit.update(dr, dcfg, feats[: 4096])  # bounded block
+
+        new_state = TrainState(params=params, opt=opt_state, dr=dr,
+                               step=state.step + 1)
+        return new_state, {"loss": loss, **metrics, **aux}
+
+    sspec = state_specs(state, mesh)
+    bspec = shard_rules.train_batch_specs(batch_like, mesh)
+    to_sh = lambda spec: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec, is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(
+        step,
+        in_shardings=(to_sh(sspec), to_sh(bspec)),
+        out_shardings=(to_sh(sspec), NamedSharding(mesh, P())),
+        donate_argnums=(0,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# pure-DP variant with cross-pod RP-compressed gradient sync (shard_map)
+# ---------------------------------------------------------------------------
+
+def make_dp_compressed_step(cfg: TrainConfig, mesh: Mesh):
+    """Replicated-param DP train step; gradients synced via ternary-RP
+    sketch + psum + back-projection with error feedback (dist.compress).
+
+    The per-shard computation (including MoE sort dispatch) runs inside
+    shard_map over the batch axes; params and optimizer state are replicated.
+    Used for the collective-bound hillclimb comparison and as the cross-pod
+    sync reference design."""
+    assert cfg.grad_compress is not None
+    dcfg = _dr_cfg(cfg.arch)
+    loss_fn = make_loss(cfg, dcfg)
+    ax = shard_rules.batch_axes(mesh)
+
+    def local_grads(params, dr, batch, ef):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, dr, batch)
+        grads, ef = compress_mod.compress_sync(grads, ef, cfg.grad_compress, ax)
+        loss = jax.lax.pmean(loss, ax)
+        return loss, grads, ef
+
+    batch_spec = P(ax)
+
+    def step(state: TrainState, batch, ef):
+        f = jax.shard_map(
+            lambda p, dr, b, e: local_grads(p, dr, b, e),
+            mesh=mesh,
+            in_specs=(P(), P(), batch_spec, P()),
+            out_specs=(P(), P(), P()),
+            check_vma=False,
+        )
+        loss, grads, ef = f(state.params, state.dr, batch, ef)
+        params, opt_state, metrics = opt_mod.apply_updates(
+            state.params, grads, state.opt, cfg.opt)
+        return TrainState(params, opt_state, state.dr, state.step + 1), ef, \
+            {"loss": loss, **metrics}
+
+    return jax.jit(step, donate_argnums=(0, 2))

@@ -1,0 +1,160 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import easi as easi_mod
+from repro.core import random_projection as rp
+from repro.kernels import ops, ref
+from repro.kernels.easi_update import easi_apply
+from repro.kernels.ternary_matmul import ternary_matmul
+
+
+def _mk_ternary(key, p, m):
+    cfg = rp.RPConfig(m=m, p=p)
+    return rp.sample_ternary(key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# ternary_matmul
+# ---------------------------------------------------------------------------
+
+TMM_SHAPES = [
+    # (b, m, p) — deliberately including non-aligned odd sizes
+    (1, 32, 24),
+    (8, 32, 16),
+    (37, 100, 9),
+    (128, 256, 128),
+    (256, 555, 77),
+    (64, 1024, 256),
+]
+
+
+class TestTernaryMatmul:
+    @pytest.mark.parametrize("b,m,p", TMM_SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, b, m, p, dtype):
+        kx, kr = jax.random.split(jax.random.PRNGKey(b * 1000 + m + p))
+        x = jax.random.normal(kx, (b, m), dtype)
+        r = _mk_ternary(kr, p, m)
+        got = ternary_matmul(x, r, scale=0.37, interpret=True)
+        want = ref.ternary_matmul_ref(x, r, scale=0.37)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("blocks", [(8, 128, 128), (128, 128, 256), (32, 256, 512)])
+    def test_block_shape_invariance(self, blocks):
+        bm, bp, bk = blocks
+        x = jax.random.normal(jax.random.PRNGKey(0), (40, 300), jnp.float32)
+        r = _mk_ternary(jax.random.PRNGKey(1), 48, 300)
+        got = ternary_matmul(x, r, scale=1.0, block_m=bm, block_p=bp, block_k=bk, interpret=True)
+        want = ref.ternary_matmul_ref(x, r)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_exactness_on_integers(self):
+        # Ternary entries are exact in fp: integer inputs -> exact integer output.
+        x = jnp.asarray(np.random.default_rng(0).integers(-8, 8, (16, 64)), jnp.float32)
+        r = _mk_ternary(jax.random.PRNGKey(2), 32, 64)
+        got = ternary_matmul(x, r, scale=1.0, interpret=True)
+        want = ref.ternary_matmul_ref(x, r)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 33), m=st.integers(8, 200), p=st.integers(1, 64),
+        scale=st.floats(0.1, 4.0),
+    )
+    def test_property_random_shapes(self, b, m, p, scale):
+        p = min(p, m)
+        kx, kr = jax.random.split(jax.random.PRNGKey(b + 31 * m + 7 * p))
+        x = jax.random.normal(kx, (b, m), jnp.float32)
+        r = _mk_ternary(kr, p, m)
+        got = ternary_matmul(x, r, scale=scale, interpret=True)
+        want = ref.ternary_matmul_ref(x, r, scale=scale)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# easi_apply (fused gradient + update)
+# ---------------------------------------------------------------------------
+
+EASI_SHAPES = [
+    # (b, n, m)
+    (1, 8, 32),        # paper scale, per-sample
+    (32, 16, 32),      # paper scale, block
+    (8, 24, 24),       # square
+    (64, 7, 100),      # odd sizes
+    (128, 128, 512),   # LM scale
+    (16, 100, 300),
+]
+
+
+class TestEasiApplyKernel:
+    @pytest.mark.parametrize("b,n,m", EASI_SHAPES)
+    @pytest.mark.parametrize("so,ho", [(True, True), (True, False), (False, True)])
+    def test_matches_oracle(self, b, n, m, so, ho):
+        kb, ky = jax.random.split(jax.random.PRNGKey(b + n * 31 + m * 7))
+        b_mat = jax.random.normal(kb, (n, m), jnp.float32) * 0.3
+        y = jax.random.normal(ky, (b, n), jnp.float32)
+        got = easi_apply(b_mat, y, mu=1e-3, second_order=so, higher_order=ho, interpret=True)
+        want = ref.easi_apply_ref(b_mat, y, mu=1e-3, second_order=so, higher_order=ho)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-6)
+
+    @pytest.mark.parametrize("g_name", ["cubic", "tanh", "sign_cubic"])
+    def test_nonlinearities(self, g_name):
+        b_mat = jax.random.normal(jax.random.PRNGKey(0), (16, 48), jnp.float32) * 0.2
+        y = jax.random.normal(jax.random.PRNGKey(1), (32, 16), jnp.float32)
+        got = easi_apply(b_mat, y, mu=5e-4, g_name=g_name, interpret=True)
+        want = ref.easi_apply_ref(b_mat, y, mu=5e-4, g_name=g_name)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-6)
+
+    def test_column_tiling_invariance(self):
+        b_mat = jax.random.normal(jax.random.PRNGKey(2), (32, 1000), jnp.float32) * 0.2
+        y = jax.random.normal(jax.random.PRNGKey(3), (64, 32), jnp.float32)
+        outs = [
+            easi_apply(b_mat, y, mu=1e-3, block_m=bm, interpret=True)
+            for bm in (128, 256, 512)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), rtol=1e-6)
+
+    def test_matches_core_easi_step(self):
+        """Kernel path == repro.core.easi.easi_step (the algorithm used everywhere)."""
+        cfg = easi_mod.EASIConfig(m=32, n=16, mu=1e-3)
+        b0 = easi_mod.init_b(jax.random.PRNGKey(4), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(5), (32, 32), jnp.float32)
+        want, _ = easi_mod.easi_step(b0, x, cfg)
+        got = ops.easi_update(b0, x, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 48), n=st.integers(2, 40), m=st.integers(2, 80))
+    def test_property_random_shapes(self, b, n, m):
+        n = min(n, m)
+        kb, ky = jax.random.split(jax.random.PRNGKey(b * 131 + n * 31 + m))
+        b_mat = jax.random.normal(kb, (n, m), jnp.float32) * 0.3
+        y = jax.random.normal(ky, (b, n), jnp.float32)
+        got = easi_apply(b_mat, y, mu=1e-3, interpret=True)
+        want = ref.easi_apply_ref(b_mat, y, mu=1e-3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: kernel-backed DR training == jnp-backed DR training
+# ---------------------------------------------------------------------------
+
+class TestKernelPathEquivalence:
+    def test_fit_with_kernels_matches_jnp(self):
+        from repro.core import dr_unit
+
+        x = jax.random.normal(jax.random.PRNGKey(6), (512, 32), jnp.float32)
+        cfg = dr_unit.DRConfig(kind="rp_easi", m=32, p=16, n=8, mu=2e-4, block_size=32)
+        st0 = dr_unit.init(jax.random.PRNGKey(7), cfg)
+        st_jnp = dr_unit.fit(st0, cfg, x, epochs=2, use_kernel=False)
+        st_krn = dr_unit.fit(st0, cfg, x, epochs=2, use_kernel=True)
+        np.testing.assert_allclose(
+            np.asarray(st_jnp.b), np.asarray(st_krn.b), rtol=5e-4, atol=5e-5)
