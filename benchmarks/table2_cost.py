@@ -7,6 +7,10 @@ We reproduce the claimed "factor of two" for the paper's (32, 16, 8) row
 and sweep m/p to show the general law, plus the int8-vs-f32 storage ratio
 the ternary alphabet buys on TPU.
 
+Costs come straight off the stage graph: each `Stage` reports its own
+Table-II numbers and `DRModel.mac_counts()` aggregates the cascade —
+including chains the old kind enum could not express (3-stage row below).
+
 Paper Table II reference (m=32, n=8): EASI only — 4052 DSPs / 38122 ALMs /
 138368 reg-bits;  RP(16)+EASI — 2212 / 70031 / 75392  (≈2× DSPs+registers).
 """
@@ -15,25 +19,41 @@ from __future__ import annotations
 
 import time
 
-from repro.core.dr_unit import DRConfig
 from repro.core.random_projection import RPConfig
+from repro.dr import DRModel, EASIStage, RPStage
 
 
-def cost_row(cfg: DRConfig) -> dict:
-    mac = cfg.mac_counts()
+def cost_row(model: DRModel) -> dict:
+    mac = model.mac_counts()
     out = {
         "rp_adds_per_sample": mac["rp_adds"],
         "easi_macs_per_sample": mac["easi_macs"],
         "total_mac_equiv": mac["rp_adds"] + mac["easi_macs"],
     }
-    if cfg.rp_cfg is not None:
-        rp: RPConfig = cfg.rp_cfg
-        out["rp_bytes_int8"] = rp.bytes_int8()
-        out["rp_bytes_f32"] = rp.bytes_f32()
-    # weight bytes of the adaptive stage (the FPGA register pressure analog)
-    e = cfg.easi_cfg
-    out["easi_weight_bytes_f32"] = 4 * e.n * e.m if e else 0
+    exe = model.execution
+    rp_bytes_int8 = rp_bytes_f32 = 0
+    weight_bytes = 0
+    for stage in model.stages:
+        if isinstance(stage, RPStage):
+            cfg = stage.rp_cfg(exe)
+            rp_bytes_int8 += cfg.bytes_int8()
+            rp_bytes_f32 += cfg.bytes_f32()
+        elif isinstance(stage, EASIStage):
+            # weight bytes of the adaptive stage (FPGA register pressure analog)
+            weight_bytes += 4 * stage.n * stage.m
+    if rp_bytes_int8:
+        out["rp_bytes_int8"] = rp_bytes_int8
+        out["rp_bytes_f32"] = rp_bytes_f32
+    out["easi_weight_bytes_f32"] = weight_bytes
     return out
+
+
+def _easi(m, n):
+    return DRModel(stages=(EASIStage.full(m, n),))
+
+
+def _chain(m, p, n):
+    return DRModel(stages=(RPStage(m, p), EASIStage.rotation(p, n)))
 
 
 def run(fast: bool = True):
@@ -41,9 +61,7 @@ def run(fast: bool = True):
     t0 = time.perf_counter()
 
     # the paper's Table II pair
-    easi = DRConfig(kind="easi", m=32, n=8)
-    chain = DRConfig(kind="rp_easi", m=32, p=16, n=8)
-    ce, cc = cost_row(easi), cost_row(chain)
+    ce, cc = cost_row(_easi(32, 8)), cost_row(_chain(32, 16, 8))
     ratio_mac = ce["easi_macs_per_sample"] / cc["easi_macs_per_sample"]
     ratio_w = ce["easi_weight_bytes_f32"] / cc["easi_weight_bytes_f32"]
     rows.append(("table2/mac_ratio_paper_row", 0.0,
@@ -53,10 +71,18 @@ def run(fast: bool = True):
                  f"ratio={ratio_w:.2f};paper_reg_ratio={138368/75392:.2f}"))
 
     # scaling law: savings ∝ m/p (paper §V-C)
+    full = ce["easi_macs_per_sample"]
     for p in (24, 16, 8):
-        c = DRConfig(kind="rp_easi", m=32, p=p, n=8)
-        r = cost_row(easi)["easi_macs_per_sample"] / cost_row(c)["easi_macs_per_sample"]
+        r = full / cost_row(_chain(32, p, 8))["easi_macs_per_sample"]
         rows.append((f"table2/scaling_p{p}", 0.0, f"m_over_p={32/p:.2f};mac_ratio={r:.2f}"))
+
+    # beyond the enum: a 3-stage cascade's aggregate cost vs its 2-stage peers
+    cascade = DRModel(stages=(RPStage(32, 24), EASIStage.whiten(24, 16),
+                              EASIStage.rotation(16, 8)))
+    c3 = cost_row(cascade)
+    rows.append(("table2/cascade_3stage", 0.0,
+                 f"macs={c3['easi_macs_per_sample']:.0f};adds={c3['rp_adds_per_sample']:.0f};"
+                 f"stages={len(cascade.stages)}"))
 
     # TPU adaptation: ternary int8 storage vs dense f32 (HBM-traffic analog)
     for m, p in ((1024, 256), (4096, 512)):

@@ -1,9 +1,13 @@
-"""DR-unit throughput: update/transform μs per call, jnp vs Pallas path.
+"""DR-model throughput: update/transform μs per call, per execution backend.
 
 NOTE: this container is CPU-only; the Pallas path runs in interpret mode,
 so kernel timings here measure CORRECTNESS-path overhead, not TPU speed —
-TPU projections come from the roofline tables instead.  The jnp numbers
+TPU projections come from the roofline tables instead.  The XLA numbers
 are still useful as relative-throughput regressions.
+
+Models are built once per (shape, backend) with the backend resolved in
+the `Execution` policy — no per-call flags on the hot path — and the
+vmapped ensemble row shows k models training in one fused pass.
 """
 
 from __future__ import annotations
@@ -13,7 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import dr_unit
+from repro.dr import DRModel, EASIStage, Execution, RPStage
 
 
 def _bench(fn, *args, iters=20, warmup=3):
@@ -26,17 +30,39 @@ def _bench(fn, *args, iters=20, warmup=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _model(m, p, n, block, backend):
+    return DRModel(
+        stages=(RPStage(m, p), EASIStage.rotation(p, n, mu=2e-4)),
+        execution=Execution(backend=backend), block_size=block)
+
+
 def run(fast: bool = True):
     rows = []
     for (m, p, n, block) in ((32, 16, 8, 32), (1024, 256, 128, 256)):
-        cfg = dr_unit.DRConfig(kind="rp_easi", m=m, p=p, n=n, mu=2e-4,
-                               block_size=block)
-        st = dr_unit.init(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (block, m), jnp.float32)
+        # interpret-mode Pallas is minutes-slow at the large shape on CPU;
+        # bench it only where it terminates quickly
+        backends = ("xla", "pallas") if m <= 32 else ("xla",)
+        for backend in backends:
+            model = _model(m, p, n, block, backend)
+            st = model.init(jax.random.PRNGKey(0))
+            upd = jax.jit(model.update)
+            tfm = jax.jit(model.transform)
+            iters = 20 if backend == "xla" else 5
+            tag = f"_{backend}" if backend != "xla" else ""
+            rows.append((f"throughput/update_m{m}{tag}",
+                         _bench(upd, st, x, iters=iters),
+                         f"block={block};tokens_per_call={block};backend={backend}"))
+            rows.append((f"throughput/transform_m{m}{tag}",
+                         _bench(tfm, st, x, iters=iters), f"backend={backend}"))
 
-        upd = jax.jit(lambda s, xb: dr_unit.update(s, cfg, xb))
-        tfm = jax.jit(lambda s, xb: dr_unit.transform(s, cfg, xb))
-        rows.append((f"throughput/update_m{m}", _bench(upd, st, x),
-                     f"block={block};tokens_per_call={block}"))
-        rows.append((f"throughput/transform_m{m}", _bench(tfm, st, x), ""))
+    # ensemble: k independent models, one vmapped update
+    k = 8
+    model = _model(32, 16, 8, 32, "xla")
+    ens = model.ensemble(k)
+    est = ens.init(jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 32), jnp.float32)
+    upd = jax.jit(ens.update)
+    rows.append((f"throughput/ensemble{k}_update_m32", _bench(upd, est, x),
+                 f"k={k};block=32"))
     return rows

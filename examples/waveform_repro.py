@@ -1,11 +1,15 @@
 """Reproduce the paper's Table I (Waveform-V2 accuracy) + references.
 
-Run:  PYTHONPATH=src python examples/waveform_repro.py [--seeds 3] [--fast]
+Run:  PYTHONPATH=src python examples/waveform_repro.py \
+          [--seeds 3] [--fast] [--backend xla|pallas]
 
-Prints our measured accuracy next to the paper's reported number for each
-row, plus init-sensitivity ablations and the ideal-PCA reference the paper
-doesn't report.  See EXPERIMENTS.md §Paper-parity for the archived results
-and analysis.
+Table rows are `repro.dr.DRModel` stage compositions (configs/waveform_paper);
+`--backend pallas` reruns the whole protocol through the fused kernels via
+the Execution policy — same numbers, different datapath.  Prints our
+measured accuracy next to the paper's reported number for each row, plus
+init-sensitivity ablations, a 3-stage cascade the old kind enum could not
+express, and the ideal-PCA reference the paper doesn't report.  See
+EXPERIMENTS.md §Paper-parity for the archived results and analysis.
 """
 
 from __future__ import annotations
@@ -19,18 +23,19 @@ import numpy as np
 
 from repro.configs import waveform_paper as wp
 from repro.core import pipeline
+from repro.core.execution import Execution
 from repro.data import waveform
 
 
-def run_row(name: str, cfg, seeds, xtr, ytr, xte, yte, fast=False):
+def run_row(name: str, cfg, seeds, xtr, ytr, xte, yte, fast=False, execution=None):
     accs = []
     for seed in seeds:
         c = dataclasses.replace(cfg, seed=seed)
         if fast:
             c = dataclasses.replace(
                 c, dr_epochs=max(1, c.dr_epochs // 4), head_epochs=15)
-        model = pipeline.fit_two_stage(c, xtr, ytr)
-        accs.append(pipeline.evaluate(model, xte, yte))
+        model = pipeline.fit_two_stage(c, xtr, ytr, execution=execution)
+        accs.append(pipeline.evaluate(model, xte, yte, execution=execution))
     return float(np.mean(accs)) * 100, float(np.std(accs)) * 100
 
 
@@ -57,17 +62,22 @@ def main():
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--fast", action="store_true", help="reduced epochs (CI smoke)")
     ap.add_argument("--skip-ablations", action="store_true")
+    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
+                    help="execution backend for every DR stage")
     args = ap.parse_args()
+    execution = Execution(backend=args.backend)
 
     (xtr, ytr), (xte, yte) = waveform.paper_split(seed=0)
     xtr, ytr, xte, yte = map(jnp.asarray, (xtr, ytr, xte, yte))
     seeds = list(range(args.seeds))
 
-    print(f"Waveform-V2: train {xtr.shape} test {xte.shape} (paper protocol)")
+    print(f"Waveform-V2: train {xtr.shape} test {xte.shape} (paper protocol, "
+          f"backend={args.backend})")
     print(f"{'row':26s} {'ours (mean±std %)':>20s} {'paper %':>8s}")
     rows = {}
     for name, cfg in wp.TABLE1_ROWS.items():
-        mean, std = run_row(name, cfg, seeds, xtr, ytr, xte, yte, fast=args.fast)
+        mean, std = run_row(name, cfg, seeds, xtr, ytr, xte, yte, fast=args.fast,
+                            execution=execution)
         rows[name] = mean
         print(f"{name:26s} {mean:13.1f} ± {std:4.1f} {wp.PAPER_TABLE1[name]:8.1f}")
 
@@ -79,8 +89,9 @@ def main():
 
     if not args.skip_ablations:
         print("\nablations / references:")
-        for name, cfg in wp.ABLATION_ROWS.items():
-            mean, std = run_row(name, cfg, seeds[:1], xtr, ytr, xte, yte, fast=args.fast)
+        for name, cfg in {**wp.ABLATION_ROWS, **wp.CASCADE_ROWS}.items():
+            mean, std = run_row(name, cfg, seeds[:1], xtr, ytr, xte, yte, fast=args.fast,
+                                execution=execution)
             print(f"{name:26s} {mean:13.1f} ± {std:4.1f}      n/a")
         for n in (16, 8, 4):
             print(f"{'ideal_pca_n%d' % n:26s} {ideal_pca_reference(xtr, ytr, xte, yte, n):13.1f}          n/a")

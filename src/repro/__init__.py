@@ -5,7 +5,8 @@ JAX/TPU reproduction + scale-out of:
   Training and Deployment of Dimensionality Reduction Models on FPGA" (2018).
 
 Public API re-exports live in subpackages:
-  repro.core      — RP / PCA-whitening / EASI / reconfigurable DR unit
+  repro.core      — RP / PCA-whitening / EASI primitives + legacy DR facade
+  repro.dr        — composable stage-graph API (RPStage/EASIStage/DRModel)
   repro.models    — backbone model zoo (transformer / rwkv6 / ssm hybrids)
   repro.train     — optimizer, train_step, fault-tolerant trainer
   repro.serve     — prefill/decode with (optionally RP-compressed) KV cache

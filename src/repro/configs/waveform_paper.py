@@ -1,5 +1,11 @@
 """The paper's own experiment (§V): Waveform-V2, m=32 → {16, 8}.
 
+Rows are expressed as composable `repro.dr.DRModel` stage chains (the
+Table-I datapaths written out explicitly); seeds and trajectories are
+identical to the historical `DRConfig(kind=...)` spelling — `DRModel.init`
+keeps the legacy key convention and `dr_unit.from_legacy` builds these
+exact compositions (tests/test_dr_model.py pins the equivalence).
+
 Locked Table-I reproduction protocol (see EXPERIMENTS.md §Paper-parity for
 measured numbers and the init-sensitivity analysis):
 
@@ -19,24 +25,46 @@ measured numbers and the init-sensitivity analysis):
 
 from __future__ import annotations
 
-from repro.core.dr_unit import DRConfig
 from repro.core.pipeline import TwoStageConfig
+from repro.dr import DRModel, EASIStage, RPStage
 
 M = 32  # paper drops the last 8 of 40 features
+
+
+def easi_model(m: int, n: int, *, mu: float = 1e-3, block: int = 1,
+               init: str = "orthonormal") -> DRModel:
+    """Full-width EASI m → n (Table I rows 1/3)."""
+    return DRModel(stages=(EASIStage.full(m, n, mu=mu, init_mode=init),),
+                   block_size=block)
+
+
+def rp_easi_model(m: int, p: int, n: int, *, mu: float = 2e-4, block: int = 32,
+                  bypass_whitening: bool = True) -> DRModel:
+    """THE PAPER'S PROPOSAL: RP m → p, then EASI p → n with the whitening
+    term bypassed (rotation-only); `bypass_whitening=False` keeps Eq. 6's
+    second-order term after RP (the Table I row 2/4 ablation)."""
+    easi = (EASIStage.rotation(p, n, mu=mu) if bypass_whitening
+            else EASIStage.full(p, n, mu=mu))
+    return DRModel(stages=(RPStage(m, p), easi), block_size=block)
+
+
+def rp_model(m: int, n: int) -> DRModel:
+    """Pure static ternary projection (reference row)."""
+    return DRModel(stages=(RPStage(m, n),))
+
+
+def whiten_model(m: int, n: int, *, mu: float = 1e-3, block: int = 1) -> DRModel:
+    """Adaptive PCA whitening (Eq. 3) reference row."""
+    return DRModel(stages=(EASIStage.whiten(m, n, mu=mu),), block_size=block)
+
 
 # ---- Table I rows (paper order) -------------------------------------------
 TABLE1_ROWS = {
     # (Algorithm1, p, Algorithm2, n) -> config
-    "easi_n16": TwoStageConfig(
-        dr=DRConfig(kind="easi", m=M, n=16, mu=1e-3, block_size=1), dr_epochs=3),
-    "rp24_easi_n16": TwoStageConfig(
-        dr=DRConfig(kind="rp_easi", m=M, p=24, n=16, mu=2e-4, block_size=32,
-                    bypass_whitening=True), dr_epochs=40),
-    "easi_n8": TwoStageConfig(
-        dr=DRConfig(kind="easi", m=M, n=8, mu=1e-3, block_size=1), dr_epochs=3),
-    "rp16_easi_n8": TwoStageConfig(
-        dr=DRConfig(kind="rp_easi", m=M, p=16, n=8, mu=2e-4, block_size=32,
-                    bypass_whitening=True), dr_epochs=40),
+    "easi_n16": TwoStageConfig(dr=easi_model(M, 16), dr_epochs=3),
+    "rp24_easi_n16": TwoStageConfig(dr=rp_easi_model(M, 24, 16), dr_epochs=40),
+    "easi_n8": TwoStageConfig(dr=easi_model(M, 8), dr_epochs=3),
+    "rp16_easi_n8": TwoStageConfig(dr=rp_easi_model(M, 16, 8), dr_epochs=40),
 }
 
 PAPER_TABLE1 = {  # paper's reported accuracies (%)
@@ -48,21 +76,30 @@ PAPER_TABLE1 = {  # paper's reported accuracies (%)
 
 # ---- ablation / reference rows ---------------------------------------------
 ABLATION_ROWS = {
-    "easi_n16_eyeinit": TwoStageConfig(
-        dr=DRConfig(kind="easi", m=M, n=16, mu=1e-3, block_size=1, init="eye"), dr_epochs=3),
-    "easi_n8_strided": TwoStageConfig(
-        dr=DRConfig(kind="easi", m=M, n=8, mu=1e-3, block_size=1, init="strided"), dr_epochs=3),
+    "easi_n16_eyeinit": TwoStageConfig(dr=easi_model(M, 16, init="eye"), dr_epochs=3),
+    "easi_n8_strided": TwoStageConfig(dr=easi_model(M, 8, init="strided"), dr_epochs=3),
     "rp24_easi_n16_fullEASI": TwoStageConfig(
-        dr=DRConfig(kind="rp_easi", m=M, p=24, n=16, mu=5e-4, block_size=1,
-                    bypass_whitening=False), dr_epochs=3),
-    "rp_n16": TwoStageConfig(dr=DRConfig(kind="rp", m=M, n=16), dr_epochs=1),
-    "rp_n8": TwoStageConfig(dr=DRConfig(kind="rp", m=M, n=8), dr_epochs=1),
-    "whiten_n16": TwoStageConfig(
-        dr=DRConfig(kind="whiten", m=M, n=16, mu=1e-3, block_size=1), dr_epochs=3),
+        dr=rp_easi_model(M, 24, 16, mu=5e-4, block=1, bypass_whitening=False),
+        dr_epochs=3),
+    "rp_n16": TwoStageConfig(dr=rp_model(M, 16), dr_epochs=1),
+    "rp_n8": TwoStageConfig(dr=rp_model(M, 8), dr_epochs=1),
+    "whiten_n16": TwoStageConfig(dr=whiten_model(M, 16), dr_epochs=3),
+}
+
+# ---- deeper than the paper: a 3-stage cascade reference --------------------
+# m → p₁ (static RP) → p₂ (whiten) → n (rotation): the kind enum could not
+# express this; the stage API trains it end-to-end (see tests/test_dr_model.py).
+CASCADE_ROWS = {
+    "rp24_whiten16_rot8": TwoStageConfig(
+        dr=DRModel(stages=(RPStage(M, 24),
+                           EASIStage.whiten(24, 16, mu=5e-4),
+                           EASIStage.rotation(16, 8, mu=2e-4)),
+                   block_size=32),
+        dr_epochs=20),
 }
 
 # Table II configs (hardware-cost comparison): EASI 32->8 vs RP(16)+EASI 16->8
 TABLE2_PAIR = {
-    "easi_32_8": DRConfig(kind="easi", m=32, n=8, mu=5e-4),
-    "rp16_easi_8": DRConfig(kind="rp_easi", m=32, p=16, n=8, mu=5e-4),
+    "easi_32_8": easi_model(32, 8, mu=5e-4),
+    "rp16_easi_8": rp_easi_model(32, 16, 8, mu=5e-4),
 }

@@ -3,18 +3,24 @@
   random_projection — sparse ternary RP (Fox'16 distribution), int8 storage
   easi              — EASI ICA update (Eq. 6) + rotation-only variant (Eq. 5)
   whitening         — adaptive PCA whitening (Eq. 3) = EASI with HOS muxed out
-  dr_unit           — the reconfigurable unit (RP | whiten | EASI | rotation |
-                      RP→EASI | RP→whiten) behind one update/transform API
+  execution         — Execution policy: backend ("xla" | "pallas"), kernel
+                      tiles, compute dtype — resolved once at model build
+  dr_unit           — legacy facade (DRConfig kinds) over the composable
+                      stage API in `repro.dr`; `from_legacy` bridges
   pipeline          — two-stage trainer (unsupervised DR → supervised head)
+
+The composable stage graph itself (Stage / RPStage / EASIStage / DRModel)
+lives in `repro.dr`.
 """
 
-from repro.core import dr_unit, easi, pipeline, random_projection, whitening
+from repro.core import dr_unit, easi, execution, pipeline, random_projection, whitening
 from repro.core.dr_unit import DRConfig, DRState
 from repro.core.easi import EASIConfig, amari_distance, whiteness_kl
+from repro.core.execution import Execution
 from repro.core.random_projection import RPConfig
 
 __all__ = [
-    "dr_unit", "easi", "pipeline", "random_projection", "whitening",
-    "DRConfig", "DRState", "EASIConfig", "RPConfig",
+    "dr_unit", "easi", "execution", "pipeline", "random_projection", "whitening",
+    "DRConfig", "DRState", "EASIConfig", "Execution", "RPConfig",
     "amari_distance", "whiteness_kl",
 ]

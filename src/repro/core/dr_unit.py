@@ -1,21 +1,20 @@
-"""The reconfigurable dimensionality-reduction unit (paper §IV).
+"""Legacy facade over the composable stage API (paper §IV).
 
-One datapath, five personalities (the paper's multiplexer, as static config):
+The reconfigurable DR unit used to live here as a six-way string enum
+(`kind` ∈ rp | whiten | easi | rotation | rp_easi | rp_whiten) with
+hand-written dispatch in every function.  That datapath is now built from
+first-class stages in `repro.dr` (RPStage / EASIStage / DRModel); this
+module keeps the old call signatures alive as a thin shim:
 
-    kind='rp'         pure ternary random projection            m → n
-    kind='whiten'     adaptive PCA whitening   (Eq. 3)          m → n
-    kind='easi'       full EASI ICA            (Eq. 6)          m → n
-    kind='rotation'   EASI with 2nd-order term bypassed (Eq. 5) m → n
-    kind='rp_easi'    THE PAPER'S PROPOSAL: RP (m → p) followed by an EASI
-                      stage (p → n) whose whitening term is bypassed
-                      (set `bypass_whitening=False` to keep full EASI after
-                      RP — the ablation the paper's Table I row 2/4 allows)
-    kind='rp_whiten'  RP (m → p) followed by adaptive whitening (p → n)
+    cfg   = DRConfig(kind="rp_easi", m=32, p=16, n=8)
+    model = from_legacy(cfg)                  # the composable equivalent
+    state = init(key, cfg)                    # same draws as ever
+    state = fit(state, cfg, x, epochs=3)      # bit-identical trajectories
 
-All personalities share `update()` / `transform()` so the surrounding system
-(two-stage trainer, LM front-end, serving path) is agnostic to which
-algorithm is configured — the software equivalent of "the same hardware
-implements random projection, PCA whitening, ICA, or a combination".
+Every function delegates to the `DRModel` built by `from_legacy`, so the
+kind table exists exactly once (repro.dr.legacy) and new stage types /
+deeper cascades need no edits here.  See EXPERIMENTS.md §Migration for the
+DRConfig → DRModel correspondence.
 """
 
 from __future__ import annotations
@@ -28,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import easi as easi_mod
 from repro.core import random_projection as rp_mod
+from repro.core.execution import Execution, resolve
 
 KINDS = ("rp", "whiten", "easi", "rotation", "rp_easi", "rp_whiten")
 
@@ -55,61 +55,36 @@ class DRConfig:
         if self.kind.startswith("rp_") and not (self.m >= self.p >= self.n):
             raise ValueError(f"need m >= p >= n, got {self.m}/{self.p}/{self.n}")
 
-    # ---- derived stage configs -------------------------------------------
+    # ---- derived stage configs (now read off the stage composition) -------
     @property
     def rp_cfg(self) -> Optional[rp_mod.RPConfig]:
-        if self.kind == "rp":
-            return rp_mod.RPConfig(m=self.m, p=self.n, sparsity=self.rp_sparsity, dtype=self.dtype)
-        if self.kind.startswith("rp_"):
-            return rp_mod.RPConfig(m=self.m, p=self.p, sparsity=self.rp_sparsity, dtype=self.dtype)
+        from repro.dr.stages import RPStage
+
+        model = from_legacy(self)
+        for stage in model.stages:
+            if isinstance(stage, RPStage):
+                return stage.rp_cfg(model.execution)
         return None
 
     @property
     def easi_cfg(self) -> Optional[easi_mod.EASIConfig]:
-        if self.kind == "rp":
-            return None
-        m_in = self.p if self.kind.startswith("rp_") else self.m
-        second, higher = {
-            "whiten": (True, False),
-            "easi": (True, True),
-            "rotation": (False, True),
-            "rp_easi": (not self.bypass_whitening, True),
-            "rp_whiten": (True, False),
-        }[self.kind]
-        # rp_easi with bypass needs at least the HOS term; guaranteed above.
-        return easi_mod.EASIConfig(
-            m=m_in, n=self.n, mu=self.mu, g=self.g,
-            second_order=second, higher_order=higher,
-            normalized=self.normalized, init=self.init, dtype=self.dtype,
-        )
+        from repro.dr.stages import EASIStage
+
+        model = from_legacy(self)
+        for stage in model.stages:
+            if isinstance(stage, EASIStage):
+                return stage.easi_cfg(model.execution)
+        return None
 
     # ---- paper Table II cost model (MAC counts) ---------------------------
     def mac_counts(self) -> dict:
         """Adder/multiplier-equivalent counts per processed sample.
 
-        EASI stage (Alg. 1 over Fig. 3's five stages) is Θ(m·n²) in both
-        adders and multipliers; RP costs only E[nnz] = p·m/s additions.
-        This is the model under which the paper's Table II shows the ~m/p
-        resource saving; `benchmarks/table2_cost.py` prints the full table.
+        Aggregated over the stage composition (each stage knows its own
+        Table-II cost); `benchmarks/table2_cost.py` prints the full table.
         """
-        def easi_macs(m, n, second, higher):
-            mv = n * m                     # y = Bx
-            nl = 2 * n if higher else 0    # cubic
-            outer = (n * n if second else 0) + (2 * n * n if higher else 0)
-            gradb = n * n * m              # G @ B
-            upd = n * m                    # B − μ(·)
-            return mv + nl + outer + gradb + upd
-
-        if self.kind == "rp":
-            return {"rp_adds": self.rp_cfg.expected_nonzeros(), "easi_macs": 0}
-        if self.kind.startswith("rp_"):
-            e = self.easi_cfg
-            return {
-                "rp_adds": self.rp_cfg.expected_nonzeros(),
-                "easi_macs": easi_macs(e.m, e.n, e.second_order, e.higher_order),
-            }
-        e = self.easi_cfg
-        return {"rp_adds": 0, "easi_macs": easi_macs(e.m, e.n, e.second_order, e.higher_order)}
+        mac = from_legacy(self).mac_counts()
+        return {"rp_adds": mac["rp_adds"], "easi_macs": mac["easi_macs"]}
 
 
 class DRState(NamedTuple):
@@ -120,55 +95,59 @@ class DRState(NamedTuple):
     steps: jax.Array         # int32 scalar update counter
 
 
+# ---------------------------------------------------------------------------
+# the shim: DRConfig → DRModel
+# ---------------------------------------------------------------------------
+
+def from_legacy(cfg: DRConfig, *, execution: Optional[Execution] = None,
+                use_kernel: bool = False):
+    """The composable `repro.dr.DRModel` equivalent of a legacy config."""
+    from repro.dr import legacy
+
+    return legacy.model_from_config(cfg, execution=resolve(execution, use_kernel))
+
+
+def _pack(cfg: DRConfig, mstate) -> DRState:
+    from repro.dr import legacy
+
+    r, b, steps = legacy.model_to_legacy_fields(mstate)
+    return DRState(r=r, b=b, steps=steps)
+
+
+def _unpack(model, state: DRState):
+    from repro.dr import legacy
+
+    return legacy.legacy_to_model_state(model, state)
+
+
+# ---------------------------------------------------------------------------
+# legacy call surface (signatures unchanged)
+# ---------------------------------------------------------------------------
+
 def init(key: jax.Array, cfg: DRConfig) -> DRState:
-    kr, kb = jax.random.split(key)
-    r = sample_r(kr, cfg)
-    b = None
-    if cfg.easi_cfg is not None:
-        b = easi_mod.init_b(kb, cfg.easi_cfg)
-    return DRState(r=r, b=b, steps=jnp.zeros((), jnp.int32))
+    return _pack(cfg, from_legacy(cfg).init(key))
 
 
 def sample_r(key: jax.Array, cfg: DRConfig) -> Optional[jax.Array]:
     return rp_mod.sample_ternary(key, cfg.rp_cfg) if cfg.rp_cfg is not None else None
 
 
-def _front(state: DRState, cfg: DRConfig, x: jax.Array, *, use_kernel: bool = False) -> jax.Array:
-    """Apply the (optional) RP stage."""
-    if cfg.rp_cfg is None:
-        return x.astype(cfg.dtype)
-    return rp_mod.apply_rp(state.r, x, cfg.rp_cfg, use_kernel=use_kernel)
-
-
-def transform(state: DRState, cfg: DRConfig, x: jax.Array, *, use_kernel: bool = False) -> jax.Array:
+def transform(state: DRState, cfg: DRConfig, x: jax.Array, *,
+              use_kernel: bool = False, execution: Optional[Execution] = None) -> jax.Array:
     """Inference: x (..., m) -> reduced features (..., n)."""
-    h = _front(state, cfg, x, use_kernel=use_kernel)
-    if state.b is None:
-        return h
-    return easi_mod.transform(state.b, h)
+    model = from_legacy(cfg, execution=resolve(execution, use_kernel))
+    return model.transform(_unpack(model, state), x)
 
 
-def update(state: DRState, cfg: DRConfig, x_block: jax.Array, *, use_kernel: bool = False) -> DRState:
+def update(state: DRState, cfg: DRConfig, x_block: jax.Array, *,
+           use_kernel: bool = False, execution: Optional[Execution] = None) -> DRState:
     """One unsupervised training step on a block x (b, m)."""
-    if state.b is None:  # pure RP: nothing to train
-        return state._replace(steps=state.steps + 1)
-    h = _front(state, cfg, x_block, use_kernel=use_kernel)
-    if use_kernel:
-        from repro.kernels import ops as kops
-
-        b_new = kops.easi_update(state.b, h, cfg.easi_cfg)
-    else:
-        b_new, _ = easi_mod.easi_step(state.b, h, cfg.easi_cfg)
-    return DRState(r=state.r, b=b_new, steps=state.steps + 1)
+    model = from_legacy(cfg, execution=resolve(execution, use_kernel))
+    return _pack(cfg, model.update(_unpack(model, state), x_block))
 
 
-def fit(state: DRState, cfg: DRConfig, x: jax.Array, *, epochs: int = 1, use_kernel: bool = False) -> DRState:
+def fit(state: DRState, cfg: DRConfig, x: jax.Array, *, epochs: int = 1,
+        use_kernel: bool = False, execution: Optional[Execution] = None) -> DRState:
     """Stream a dataset x (N, m) through `update` in cfg.block_size blocks."""
-    if state.b is None:
-        return state._replace(steps=state.steps + jnp.int32(epochs * (x.shape[0] // max(1, cfg.block_size))))
-    h = _front(state, cfg, x, use_kernel=use_kernel)  # project once, train on h
-    b = easi_mod.easi_fit(
-        state.b, h, cfg.easi_cfg, block_size=cfg.block_size, epochs=epochs, use_kernel=use_kernel
-    )
-    nblocks = epochs * (x.shape[0] // cfg.block_size)
-    return DRState(r=state.r, b=b, steps=state.steps + jnp.int32(nblocks))
+    model = from_legacy(cfg, execution=resolve(execution, use_kernel))
+    return _pack(cfg, model.fit(_unpack(model, state), x, epochs=epochs))

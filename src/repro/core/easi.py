@@ -153,22 +153,29 @@ def easi_fit(
     block_size: int = 1,
     epochs: int = 1,
     use_kernel: bool = False,
+    execution=None,
 ) -> jax.Array:
     """Stream x (N, m) through EASI in blocks via lax.scan; returns trained B.
 
     block_size=1 is the paper-faithful per-sample SGD; larger blocks are the
     TPU-adapted batched estimator.  Trailing samples that do not fill a block
     are dropped (deterministic, restart-safe).
+
+    The backend comes from the `execution` policy (repro.core.execution);
+    `use_kernel` is the legacy boolean spelling of the same choice.
     """
+    from repro.core.execution import resolve
+
+    exe = resolve(execution, use_kernel)
     n_samples = x.shape[0]
     nblocks = n_samples // block_size
     blocks = x[: nblocks * block_size].reshape(nblocks, block_size, cfg.m)
 
-    if use_kernel:
+    if exe.use_kernel:
         from repro.kernels import ops as kops
 
         def body(b_mat, blk):
-            return kops.easi_update(b_mat, blk, cfg), None
+            return kops.easi_update(b_mat, blk, cfg, block_m=exe.easi_block_m), None
     else:
         def body(b_mat, blk):
             b_new, _ = easi_step(b_mat, blk, cfg)

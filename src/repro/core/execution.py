@@ -1,0 +1,59 @@
+"""Execution policy: which backend runs the DR datapath, and how it's tiled.
+
+One frozen object, resolved ONCE when a `repro.dr.DRModel` is built,
+replaces the `use_kernel: bool` that used to be threaded through every
+call in `easi.py` / `dr_unit.py` / `pipeline.py`:
+
+    backend="xla"     — plain jnp/XLA ops (reference semantics everywhere)
+    backend="pallas"  — the fused Pallas kernels (`repro.kernels`): Mosaic
+                        on TPU, interpret mode elsewhere, numerically
+                        interchangeable with the XLA path
+
+Block sizes are the kernel tile shapes (multiples of the MXU/VPU tiles —
+128 lanes; see the Pallas guide's tiling table); `dtype` is the compute
+dtype stages inherit unless they pin their own.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+BACKENDS = ("xla", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class Execution:
+    backend: str = "xla"
+    # ternary-matmul (RP) kernel tiles: rows × output dims × contraction
+    tmm_block_m: int = 128
+    tmm_block_p: int = 128
+    tmm_block_k: int = 512
+    # fused EASI-update kernel: sample-block tile
+    easi_block_m: int = 512
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; one of {BACKENDS}")
+        for f in ("tmm_block_m", "tmm_block_p", "tmm_block_k", "easi_block_m"):
+            if getattr(self, f) < 1:
+                raise ValueError(f"{f} must be >= 1")
+
+    @property
+    def use_kernel(self) -> bool:
+        return self.backend == "pallas"
+
+
+XLA = Execution(backend="xla")
+PALLAS = Execution(backend="pallas")
+
+
+def resolve(execution: Optional[Execution] = None, use_kernel: bool = False) -> Execution:
+    """Back-compat shim: an explicit Execution wins; else map the legacy
+    `use_kernel` flag onto the default policy for that backend."""
+    if execution is not None:
+        return execution
+    return PALLAS if use_kernel else XLA

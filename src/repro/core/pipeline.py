@@ -4,6 +4,11 @@
   Stage 2 — transform the dataset and train a downstream head
             (paper: MLP, 2 hidden layers × 64) on the reduced features.
 
+`TwoStageConfig.dr` accepts either the composable `repro.dr.DRModel` or a
+legacy `dr_unit.DRConfig` (bridged through `dr_unit.from_legacy`); the
+execution backend is whatever the model was built with, overridable per
+call via `execution=`.
+
 Preprocessing convention (important — see EXPERIMENTS.md §Paper-parity):
 the DR stage sees *centred* data rescaled by ONE global scalar (mean per-dim
 variance → 1).  Per-feature standardisation would erase the signal-vs-noise
@@ -16,17 +21,18 @@ per-feature standardised, which is ordinary classifier hygiene.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import dr_unit
+from repro.core.execution import Execution, resolve
 
 
 @dataclasses.dataclass(frozen=True)
 class TwoStageConfig:
-    dr: dr_unit.DRConfig
+    dr: Union[dr_unit.DRConfig, "Any"]        # DRConfig or repro.dr.DRModel
     dr_epochs: int = 3
     head_hidden: Tuple[int, ...] = (64, 64)   # paper §V-B
     head_classes: int = 3
@@ -35,6 +41,18 @@ class TwoStageConfig:
     head_epochs: int = 60
     head_batch: int = 128
     seed: int = 0
+
+
+def as_model(dr, *, execution: Optional[Execution] = None, use_kernel: bool = False):
+    """Normalise a DRConfig-or-DRModel to a DRModel, optionally overriding
+    its execution policy (an explicit `execution` always wins)."""
+    from repro.dr.model import DRModel
+
+    if isinstance(dr, DRModel):
+        if execution is not None or use_kernel:
+            return dr.with_execution(resolve(execution, use_kernel))
+        return dr
+    return dr_unit.from_legacy(dr, execution=execution, use_kernel=use_kernel)
 
 
 def standardize(x: jax.Array, stats: Optional[Tuple[jax.Array, jax.Array]] = None):
@@ -63,38 +81,51 @@ def fit_two_stage(
     y_train: jax.Array,
     *,
     use_kernel: bool = False,
+    execution: Optional[Execution] = None,
 ) -> Dict[str, Any]:
-    """Returns dict with dr_state, head params, and both stats tuples."""
+    """Returns dict with dr_model, dr_state, head params, and stats tuples."""
     from repro.models import mlp  # local import to keep core standalone
 
+    model = as_model(cfg.dr, execution=execution, use_kernel=use_kernel)
     key = jax.random.PRNGKey(cfg.seed)
     k_dr, k_head, k_shuf = jax.random.split(key, 3)
 
     x_dr, dr_stats = center_global_scale(x_train)
-    dr_state = dr_unit.init(k_dr, cfg.dr)
-    dr_state = dr_unit.fit(dr_state, cfg.dr, x_dr, epochs=cfg.dr_epochs, use_kernel=use_kernel)
+    dr_state = model.init(k_dr)
+    dr_state = model.fit(dr_state, x_dr, epochs=cfg.dr_epochs)
 
-    feats = dr_unit.transform(dr_state, cfg.dr, x_dr, use_kernel=use_kernel)
+    feats = model.transform(dr_state, x_dr)
     feats_std, head_stats = standardize(feats)
     head = mlp.init(k_head, feats.shape[-1], cfg.head_hidden, cfg.head_classes)
     head = mlp.fit(
         head, feats_std, y_train,
         lr=cfg.head_lr, wd=cfg.head_wd, epochs=cfg.head_epochs, batch=cfg.head_batch, key=k_shuf,
     )
-    return {"dr_state": dr_state, "head": head, "dr_stats": dr_stats,
-            "head_stats": head_stats, "cfg": cfg}
+    return {"dr_model": model, "dr_state": dr_state, "head": head,
+            "dr_stats": dr_stats, "head_stats": head_stats, "cfg": cfg}
 
 
-def predict(model: Dict[str, Any], x: jax.Array, *, use_kernel: bool = False) -> jax.Array:
+def predict(model: Dict[str, Any], x: jax.Array, *,
+            use_kernel: bool = False, execution: Optional[Execution] = None) -> jax.Array:
     from repro.models import mlp
 
     cfg: TwoStageConfig = model["cfg"]
+    dr_model = model.get("dr_model")
+    if dr_model is None or execution is not None or use_kernel:
+        dr_model = as_model(cfg.dr if dr_model is None else dr_model,
+                            execution=execution, use_kernel=use_kernel)
+    dr_state = model["dr_state"]
+    if isinstance(dr_state, dr_unit.DRState):  # pre-refactor model dicts
+        from repro.dr import legacy
+
+        dr_state = legacy.legacy_to_model_state(dr_model, dr_state)
     x_dr, _ = center_global_scale(x, model["dr_stats"])
-    feats = dr_unit.transform(model["dr_state"], cfg.dr, x_dr, use_kernel=use_kernel)
+    feats = dr_model.transform(dr_state, x_dr)
     feats_std, _ = standardize(feats, model["head_stats"])
     return mlp.apply(model["head"], feats_std)
 
 
-def evaluate(model: Dict[str, Any], x_test: jax.Array, y_test: jax.Array, *, use_kernel: bool = False) -> float:
-    logits = predict(model, x_test, use_kernel=use_kernel)
+def evaluate(model: Dict[str, Any], x_test: jax.Array, y_test: jax.Array, *,
+             use_kernel: bool = False, execution: Optional[Execution] = None) -> float:
+    logits = predict(model, x_test, use_kernel=use_kernel, execution=execution)
     return float(jnp.mean((jnp.argmax(logits, -1) == y_test).astype(jnp.float32)))

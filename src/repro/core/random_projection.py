@@ -116,18 +116,25 @@ def _apply_dense(r_int8: jax.Array, x: jax.Array, scale: float) -> jax.Array:
     return (x @ r.T) * jnp.asarray(scale, x.dtype)
 
 
-def apply_rp(r_int8: jax.Array, x: jax.Array, cfg: RPConfig, *, use_kernel: bool = False) -> jax.Array:
+def apply_rp(r_int8: jax.Array, x: jax.Array, cfg: RPConfig, *,
+             use_kernel: bool = False, execution=None) -> jax.Array:
     """Project x (…, m) -> (…, p).
 
-    `use_kernel=True` routes through the Pallas ternary-matmul kernel
+    The pallas backend (via the `execution` policy, or the legacy
+    `use_kernel=True` flag) routes through the ternary-matmul kernel
     (TPU target; interpret-mode on CPU) — numerically identical to the
     dense path (ternary entries are exact in every float dtype).
     """
+    from repro.core.execution import resolve
+
+    exe = resolve(execution, use_kernel)
     x2 = x.reshape((-1, cfg.m)).astype(cfg.dtype)
-    if use_kernel:
+    if exe.use_kernel:
         from repro.kernels import ops as kops  # local import: keep core dep-free
 
-        y = kops.ternary_matmul(x2, r_int8, scale=cfg.scale)
+        y = kops.ternary_matmul(x2, r_int8, scale=cfg.scale,
+                                block_m=exe.tmm_block_m, block_p=exe.tmm_block_p,
+                                block_k=exe.tmm_block_k)
     else:
         y = _apply_dense(r_int8, x2, cfg.scale)
     return y.reshape(x.shape[:-1] + (cfg.p,))

@@ -26,10 +26,12 @@ def init_w(key: jax.Array, cfg: easi.EASIConfig) -> jax.Array:
     return easi.init_b(key, cfg)
 
 
-def whiten_fit(w0, x, cfg, *, block_size: int = 1, epochs: int = 1, use_kernel: bool = False):
+def whiten_fit(w0, x, cfg, *, block_size: int = 1, epochs: int = 1,
+               use_kernel: bool = False, execution=None):
     """Train W on x (N, m); returns W minimising KL(Σ_z ‖ I)."""
     assert not cfg.higher_order, "whitening must not carry the HOS term"
-    return easi.easi_fit(w0, x, cfg, block_size=block_size, epochs=epochs, use_kernel=use_kernel)
+    return easi.easi_fit(w0, x, cfg, block_size=block_size, epochs=epochs,
+                         use_kernel=use_kernel, execution=execution)
 
 
 transform = easi.transform

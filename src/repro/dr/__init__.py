@@ -1,0 +1,30 @@
+"""repro.dr — the composable stage-graph API for dimensionality reduction.
+
+Replaces the closed `DRConfig.kind` enum with first-class stages:
+
+    from repro.dr import DRModel, RPStage, EASIStage, Execution
+
+    model = DRModel(
+        stages=(RPStage(32, 16), EASIStage.rotation(16, 8)),
+        execution=Execution(backend="pallas"),
+        block_size=32,
+    )
+    state = model.init(jax.random.PRNGKey(0))
+    state = model.fit(state, x, epochs=3)
+    y = model.transform(state, x)
+
+Legacy `dr_unit.DRConfig` call sites keep working through
+`repro.core.dr_unit.from_legacy` (which delegates to `legacy.model_from_config`).
+"""
+
+from repro.core.execution import Execution, PALLAS, XLA
+from repro.dr.legacy import model_from_config
+from repro.dr.model import DREnsemble, DRModel, ModelState
+from repro.dr.stages import EASIStage, RPStage, Stage
+
+__all__ = [
+    "DRModel", "DREnsemble", "ModelState",
+    "Stage", "RPStage", "EASIStage",
+    "Execution", "XLA", "PALLAS",
+    "model_from_config",
+]

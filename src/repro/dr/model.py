@@ -1,0 +1,238 @@
+"""`DRModel` — an arbitrary cascade of DR stages behind one train/serve API.
+
+The paper's reconfigurable unit generalised: where `DRConfig.kind` could
+name six fixed chains, a `DRModel` composes ANY dimension-matched stage
+sequence m → p₁ → … → n:
+
+    model = DRModel(stages=(RPStage(32, 16), EASIStage.rotation(16, 8)),
+                    execution=Execution(backend="pallas"), block_size=32)
+    state = model.init(key)
+    state = model.fit(state, x, epochs=3)       # unsupervised streaming
+    y     = model.transform(state, x)           # deployment
+
+The execution backend is resolved once here (no per-call flags), and
+`model.ensemble(k)` vmaps the whole thing to train k independent models
+(seed sweeps / scenario diversity) in a single pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.execution import Execution
+from repro.dr.stages import EASIStage, RPStage, Stage
+
+PyTree = Any
+
+
+class ModelState(NamedTuple):
+    """Per-stage states (bare arrays) + an update counter. A JAX pytree."""
+
+    stages: Tuple[PyTree, ...]
+    steps: jax.Array
+
+    # Convenience accessors for the overwhelmingly common RP→EASI shapes.
+    @property
+    def r(self) -> Optional[jax.Array]:
+        """First static ternary matrix (int8), if any."""
+        for s in self.stages:
+            if s is not None and hasattr(s, "dtype") and s.dtype == jnp.int8:
+                return s
+        return None
+
+    @property
+    def b(self) -> Optional[jax.Array]:
+        """Last adaptive separation matrix (float), if any."""
+        for s in reversed(self.stages):
+            if s is not None and hasattr(s, "dtype") \
+                    and jnp.issubdtype(s.dtype, jnp.floating):
+                return s
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class DRModel:
+    stages: Tuple[Stage, ...]
+    execution: Execution = Execution()
+    block_size: int = 1          # samples per update block (1 = paper-exact)
+
+    def __post_init__(self):
+        if not self.stages:
+            raise ValueError("DRModel needs at least one stage")
+        for a, b in zip(self.stages, self.stages[1:]):
+            if a.out_dim != b.in_dim:
+                raise ValueError(
+                    f"stage dims do not chain: {type(a).__name__}(->{a.out_dim}) "
+                    f"feeds {type(b).__name__}({b.in_dim}->)")
+        if self.block_size < 1:
+            raise ValueError("block_size must be >= 1")
+
+    # ---- shape metadata ----------------------------------------------------
+    @property
+    def in_dim(self) -> int:
+        return self.stages[0].in_dim
+
+    @property
+    def out_dim(self) -> int:
+        return self.stages[-1].out_dim
+
+    @property
+    def dims(self) -> Tuple[int, ...]:
+        return (self.in_dim,) + tuple(s.out_dim for s in self.stages)
+
+    def with_execution(self, exe: Execution) -> "DRModel":
+        return dataclasses.replace(self, execution=exe)
+
+    # ---- lifecycle ---------------------------------------------------------
+    def init(self, key: jax.Array) -> ModelState:
+        """Key convention: split(key) → (static, adaptive) sub-keys, each
+        fold_in'd per stage of its class.  For ≤1 static + ≤1 adaptive
+        stage this reproduces the historical `dr_unit.init` draw exactly,
+        so seeds (and checkpoints) carry over from the legacy API."""
+        ks, ka = jax.random.split(key)
+        n_static = sum(1 for s in self.stages if not s.trainable)
+        n_adapt = len(self.stages) - n_static
+        static_keys = [ks] if n_static <= 1 else \
+            [jax.random.fold_in(ks, i) for i in range(n_static)]
+        adapt_keys = [ka] if n_adapt <= 1 else \
+            [jax.random.fold_in(ka, i) for i in range(n_adapt)]
+        states, i_s, i_a = [], 0, 0
+        for stage in self.stages:
+            if stage.trainable:
+                states.append(stage.init(adapt_keys[i_a], self.execution))
+                i_a += 1
+            else:
+                states.append(stage.init(static_keys[i_s], self.execution))
+                i_s += 1
+        return ModelState(stages=tuple(states), steps=jnp.zeros((), jnp.int32))
+
+    # ---- inference ---------------------------------------------------------
+    def transform(self, state: ModelState, x: jax.Array) -> jax.Array:
+        """x (..., m) → reduced features (..., n)."""
+        h = x
+        for stage, s in zip(self.stages, state.stages):
+            h = stage.transform(s, h, self.execution)
+        return h
+
+    # ---- streaming training ------------------------------------------------
+    def update(self, state: ModelState, x_block: jax.Array) -> ModelState:
+        """One unsupervised step on a block (b, m): every adaptive stage
+        updates from its own input, computed through the pre-update states
+        upstream (the per-sample Eq. 6 semantics, stage-wise)."""
+        h = x_block
+        new_states = []
+        for stage, s in zip(self.stages, state.stages):
+            new_states.append(stage.update(s, h, self.execution))
+            h = stage.transform(s, h, self.execution)
+        return ModelState(stages=tuple(new_states), steps=state.steps + 1)
+
+    def fit(self, state: ModelState, x: jax.Array, *, epochs: int = 1) -> ModelState:
+        """Stream a dataset x (N, m) through `update` in block_size blocks.
+
+        Static leading stages project the whole dataset once (they never
+        change); the adaptive suffix then scans it in blocks.  A suffix of
+        exactly one EASI stage takes the fused `easi_fit` fast path — the
+        same jitted program the legacy `dr_unit.fit` ran, so trajectories
+        are bit-identical through the `from_legacy` shim.
+        """
+        n_samples = x.shape[0]
+        h = x
+        i = 0
+        while i < len(self.stages) and not self.stages[i].trainable:
+            h = self.stages[i].transform(state.stages[i], h, self.execution)
+            i += 1
+
+        if i == len(self.stages):   # fully static chain: nothing to train
+            nblocks = epochs * (n_samples // max(1, self.block_size))
+            return state._replace(steps=state.steps + jnp.int32(nblocks))
+
+        suffix = self.stages[i:]
+        nblocks = epochs * (n_samples // self.block_size)
+        if len(suffix) == 1 and isinstance(suffix[0], EASIStage):
+            b = suffix[0].fit_stream(state.stages[i], h, self.execution,
+                                     block_size=self.block_size, epochs=epochs)
+            new_states = state.stages[:i] + (b,)
+            return ModelState(stages=tuple(new_states),
+                              steps=state.steps + jnp.int32(nblocks))
+
+        # general cascade: scan blocks through the adaptive suffix
+        per_epoch = n_samples // self.block_size
+        blocks = h[: per_epoch * self.block_size].reshape(
+            per_epoch, self.block_size, suffix[0].in_dim)
+        exe = self.execution
+
+        def body(carry, blk):
+            hb = blk
+            new = []
+            for stage, s in zip(suffix, carry):
+                new.append(stage.update(s, hb, exe))
+                hb = stage.transform(s, hb, exe)
+            return tuple(new), None
+
+        @jax.jit
+        def one_epoch(carry):
+            out, _ = jax.lax.scan(body, carry, blocks)
+            return out
+
+        carry = tuple(state.stages[i:])
+        for _ in range(epochs):
+            carry = one_epoch(carry)
+        return ModelState(stages=tuple(state.stages[:i]) + carry,
+                          steps=state.steps + jnp.int32(nblocks))
+
+    # ---- cost model / sharding --------------------------------------------
+    def mac_counts(self) -> Dict[str, Any]:
+        """Aggregate paper-Table-II cost: RP adds + adaptive-stage MACs per
+        processed sample, plus the per-stage breakdown."""
+        per_stage = tuple(s.mac_counts() for s in self.stages)
+        return {
+            "rp_adds": float(sum(c["adds"] for c in per_stage)),
+            "easi_macs": float(sum(c["macs"] for c in per_stage)),
+            "per_stage": per_stage,
+        }
+
+    def shard_specs(self, mesh: Optional[Mesh]) -> ModelState:
+        """PartitionSpec tree shaped like a ModelState (serving/in_shardings)."""
+        return ModelState(
+            stages=tuple(s.shard_spec(mesh) for s in self.stages),
+            steps=P())
+
+    # ---- ensembling --------------------------------------------------------
+    def ensemble(self, k: int) -> "DREnsemble":
+        return DREnsemble(model=self, k=k)
+
+
+@dataclasses.dataclass(frozen=True)
+class DREnsemble:
+    """k independent replicas of one DRModel trained in a single vmapped
+    pass — seed sweeps and scenario diversity without a python loop.
+
+    States carry a leading (k,) axis on every leaf; data is shared across
+    members (each member differs only in its random init).
+    """
+
+    model: DRModel
+    k: int
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError("ensemble size must be >= 1")
+
+    def init(self, key: jax.Array) -> ModelState:
+        return jax.vmap(self.model.init)(jax.random.split(key, self.k))
+
+    def update(self, state: ModelState, x_block: jax.Array) -> ModelState:
+        return jax.vmap(self.model.update, in_axes=(0, None))(state, x_block)
+
+    def fit(self, state: ModelState, x: jax.Array, *, epochs: int = 1) -> ModelState:
+        fit = lambda s: self.model.fit(s, x, epochs=epochs)
+        return jax.vmap(fit)(state)
+
+    def transform(self, state: ModelState, x: jax.Array) -> jax.Array:
+        """x (..., m) → (k, ..., n)."""
+        return jax.vmap(self.model.transform, in_axes=(0, None))(state, x)

@@ -1,3 +1,4 @@
-from repro.serve import serve_step
+from repro.serve import dr_serve, serve_step
+from repro.serve.dr_serve import dr_transform, make_dr_transform
 
-__all__ = ["serve_step"]
+__all__ = ["serve_step", "dr_serve", "dr_transform", "make_dr_transform"]

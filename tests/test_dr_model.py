@@ -1,0 +1,315 @@
+"""Redesign tests: stage-graph DRModel vs the legacy DRConfig facade.
+
+  * legacy-shim parity — every one of the six `DRConfig.kind`s must produce
+    BIT-IDENTICAL B/R trajectories through `dr_unit.from_legacy`, checked
+    against a hand-rolled replica of the pre-refactor dispatch (the old
+    {kind: (second, higher)} table is frozen here as the oracle).
+  * 3-stage cascade m→p₁→p₂→n trains end-to-end on both backends.
+  * Execution("pallas") ≡ Execution("xla") numerically.
+  * vmapped ensemble(k), sharded serve endpoint, validation errors.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dr_unit, easi as easi_mod, random_projection as rp_mod
+from repro.core.execution import Execution
+from repro.data import mixtures
+from repro.dr import DRModel, EASIStage, ModelState, RPStage
+
+jax.config.update("jax_enable_x64", False)
+
+# The retired dispatch table, frozen as the parity oracle:
+# kind -> (has_rp, second_order, higher_order)  [None = no EASI stage]
+LEGACY_TABLE = {
+    "rp": (True, None, None),
+    "whiten": (False, True, False),
+    "easi": (False, True, True),
+    "rotation": (False, False, True),
+    "rp_easi": (True, False, True),      # bypass_whitening=True default
+    "rp_whiten": (True, True, False),
+}
+
+ALL_KINDS = list(LEGACY_TABLE)
+
+
+def _cfg(kind, **kw):
+    kw.setdefault("block_size", 4)
+    if kind.startswith("rp_"):
+        kw.setdefault("p", 12)
+    return dr_unit.DRConfig(kind=kind, m=16, n=8, mu=1e-3, **kw)
+
+
+def _legacy_reference(cfg, key, x, epochs):
+    """Replica of the pre-refactor dr_unit: init + fit, primitive calls only."""
+    has_rp, second, higher = LEGACY_TABLE[cfg.kind]
+    kr, kb = jax.random.split(key)
+    if has_rp:
+        p_out = cfg.p if cfg.kind != "rp" else cfg.n
+        rp_cfg = rp_mod.RPConfig(m=cfg.m, p=p_out, sparsity=cfg.rp_sparsity,
+                                 dtype=cfg.dtype)
+        r = rp_mod.sample_ternary(kr, rp_cfg)
+    else:
+        rp_cfg, r = None, None
+    if second is None:
+        return r, None
+    m_in = cfg.p if has_rp else cfg.m
+    easi_cfg = easi_mod.EASIConfig(m=m_in, n=cfg.n, mu=cfg.mu, g=cfg.g,
+                                   second_order=second, higher_order=higher,
+                                   normalized=cfg.normalized, init=cfg.init,
+                                   dtype=cfg.dtype)
+    b = easi_mod.init_b(kb, easi_cfg)
+    h = x.astype(cfg.dtype) if rp_cfg is None else rp_mod.apply_rp(r, x, rp_cfg)
+    b = easi_mod.easi_fit(b, h, easi_cfg, block_size=cfg.block_size, epochs=epochs)
+    return r, b
+
+
+class TestLegacyShimParity:
+    @pytest.mark.parametrize("kind", ALL_KINDS)
+    def test_fit_trajectory_bit_identical(self, kind):
+        cfg = _cfg(kind)
+        key = jax.random.PRNGKey(7)
+        x = jax.random.normal(jax.random.PRNGKey(8), (256, cfg.m))
+
+        st = dr_unit.init(key, cfg)
+        st = dr_unit.fit(st, cfg, x, epochs=2)
+        r_ref, b_ref = _legacy_reference(cfg, key, x, epochs=2)
+
+        if r_ref is None:
+            assert st.r is None
+        else:
+            np.testing.assert_array_equal(np.asarray(st.r), np.asarray(r_ref))
+        if b_ref is None:
+            assert st.b is None
+        else:
+            np.testing.assert_array_equal(np.asarray(st.b), np.asarray(b_ref))
+
+    @pytest.mark.parametrize("kind", [k for k in ALL_KINDS if k != "rp"])
+    def test_single_update_bit_identical(self, kind):
+        cfg = _cfg(kind)
+        st = dr_unit.init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.m))
+        up = dr_unit.update(st, cfg, x)
+        h = x.astype(cfg.dtype) if st.r is None \
+            else rp_mod.apply_rp(st.r, x, cfg.rp_cfg)
+        b_manual, _ = easi_mod.easi_step(st.b, h, cfg.easi_cfg)
+        np.testing.assert_array_equal(np.asarray(up.b), np.asarray(b_manual))
+        assert int(up.steps) == int(st.steps) + 1
+
+    def test_rp_easi_no_bypass_keeps_second_order(self):
+        cfg = _cfg("rp_easi", bypass_whitening=False)
+        model = dr_unit.from_legacy(cfg)
+        easi_stage = model.stages[-1]
+        assert easi_stage.second_order and easi_stage.higher_order
+
+    @pytest.mark.parametrize("kind", ALL_KINDS)
+    def test_from_legacy_structure(self, kind):
+        has_rp, second, higher = LEGACY_TABLE[kind]
+        model = dr_unit.from_legacy(_cfg(kind))
+        types = tuple(type(s) for s in model.stages)
+        if has_rp and second is None:
+            assert types == (RPStage,)
+        elif has_rp:
+            assert types == (RPStage, EASIStage)
+        else:
+            assert types == (EASIStage,)
+        if second is not None:
+            st = model.stages[-1]
+            assert (st.second_order, st.higher_order) == (second, higher)
+        assert model.dims[0] == 16 and model.dims[-1] == 8
+
+    def test_easi_only_nondefault_dtype_casts_like_legacy(self):
+        """The old _front cast x.astype(cfg.dtype) even without an RP stage;
+        the stage path must keep that (bf16 stages must not promote to f32)."""
+        cfg = _cfg("easi", dtype=jnp.bfloat16)
+        st = dr_unit.init(jax.random.PRNGKey(20), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(21), (16, cfg.m))
+        y = dr_unit.transform(st, cfg, x)
+        assert y.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(y, np.float32),
+            np.asarray(easi_mod.transform(st.b, x.astype(jnp.bfloat16)), np.float32))
+
+    def test_predict_accepts_pre_refactor_state_dict(self):
+        """predict() must repack a legacy DRState-carrying model dict."""
+        from repro.core import pipeline
+
+        cfg = _cfg("rp_easi", block_size=16)
+        st = dr_unit.init(jax.random.PRNGKey(22), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(23), (64, cfg.m))
+        y = jax.random.randint(jax.random.PRNGKey(24), (64,), 0, 3)
+        tcfg = pipeline.TwoStageConfig(dr=cfg, dr_epochs=1, head_epochs=2,
+                                       head_batch=32)
+        fitted = pipeline.fit_two_stage(tcfg, x, y)
+        old_style = {**fitted, "dr_state": st}
+        old_style.pop("dr_model")
+        logits = pipeline.predict(old_style, x)
+        assert logits.shape == (64, 3)
+
+    def test_transform_matches_legacy_path(self):
+        cfg = _cfg("rp_easi")
+        st = dr_unit.init(jax.random.PRNGKey(3), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(4), (32, cfg.m))
+        y_shim = dr_unit.transform(st, cfg, x)
+        h = rp_mod.apply_rp(st.r, x, cfg.rp_cfg)
+        np.testing.assert_array_equal(
+            np.asarray(y_shim), np.asarray(easi_mod.transform(st.b, h)))
+
+
+class TestCascade:
+    def _cascade(self, backend="xla", block=32):
+        return DRModel(
+            stages=(RPStage(32, 16),
+                    EASIStage.whiten(16, 12, mu=1e-3),
+                    EASIStage.rotation(12, 8, mu=5e-4)),
+            execution=Execution(backend=backend), block_size=block)
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_three_stage_trains_end_to_end(self, backend):
+        # full-rank mixture (n_src = m) so every cascade dim is whitenable
+        x, _, _ = mixtures.mixture(n_samples=4096, m=32, n_src=32, seed=0)
+        x = jnp.asarray(x)
+        x = (x - x.mean(0)) / (jnp.sqrt(jnp.mean(jnp.var(x, axis=0))) + 1e-8)
+        model = self._cascade(backend)
+        st0 = model.init(jax.random.PRNGKey(0))
+        st = model.fit(st0, x, epochs=2)
+        y = model.transform(st, x)
+        assert y.shape == (4096, 8)
+        assert bool(jnp.isfinite(y).all())
+        assert int(st.steps) == 2 * (4096 // 32)
+        assert [s.shape for s in st.stages] == [(16, 32), (12, 16), (8, 12)]
+        # the middle whitening stage makes its own output whiter than at init
+        h = model.stages[0].transform(st.stages[0], x, model.execution)
+        z0 = model.stages[1].transform(st0.stages[1], h, model.execution)
+        z = model.stages[1].transform(st.stages[1], h, model.execution)
+        assert float(easi_mod.whiteness_kl(z)) < float(easi_mod.whiteness_kl(z0))
+
+    def test_update_semantics_stagewise(self):
+        """One cascade update == each stage updated from the pre-update
+        forward pass (the documented streaming semantics)."""
+        model = self._cascade()
+        st = model.init(jax.random.PRNGKey(1))
+        x = jax.random.normal(jax.random.PRNGKey(2), (32, 32))
+        up = model.update(st, x)
+        h = x
+        for i, (stage, s) in enumerate(zip(model.stages, st.stages)):
+            expect = stage.update(s, h, model.execution)
+            np.testing.assert_array_equal(np.asarray(up.stages[i]), np.asarray(expect))
+            h = stage.transform(s, h, model.execution)
+
+    def test_dim_mismatch_raises(self):
+        with pytest.raises(ValueError, match="chain"):
+            DRModel(stages=(RPStage(32, 16), EASIStage.full(12, 8)))
+
+    def test_generic_fit_matches_manual_scan(self):
+        """The multi-stage scan path == a python loop of `update` blocks."""
+        model = self._cascade(block=16)
+        st = model.init(jax.random.PRNGKey(5))
+        x = jax.random.normal(jax.random.PRNGKey(6), (64, 32))
+        fitted = model.fit(st, x, epochs=1)
+        manual = st
+        for i in range(64 // 16):
+            manual = model.update(manual, x[i * 16:(i + 1) * 16])
+        for a, b in zip(fitted.stages, manual.stages):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+class TestExecutionBackends:
+    @pytest.mark.parametrize("kind", ["rp", "rp_easi", "easi", "rp_whiten"])
+    def test_pallas_matches_xla(self, kind):
+        cfg = _cfg(kind, block_size=32)
+        x = jax.random.normal(jax.random.PRNGKey(9), (256, cfg.m))
+        st = dr_unit.init(jax.random.PRNGKey(10), cfg)
+        st_x = dr_unit.fit(st, cfg, x, epochs=1, execution=Execution(backend="xla"))
+        st_p = dr_unit.fit(st, cfg, x, epochs=1, execution=Execution(backend="pallas"))
+        if st.b is not None:
+            np.testing.assert_allclose(np.asarray(st_x.b), np.asarray(st_p.b),
+                                       rtol=2e-5, atol=2e-6)
+        y_x = dr_unit.transform(st_x, cfg, x, execution=Execution(backend="xla"))
+        y_p = dr_unit.transform(st_x, cfg, x, execution=Execution(backend="pallas"))
+        np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p),
+                                   rtol=2e-5, atol=2e-6)
+
+    def test_execution_validation(self):
+        with pytest.raises(ValueError):
+            Execution(backend="cuda")
+
+    def test_use_kernel_flag_maps_to_policy(self):
+        from repro.core.execution import resolve
+
+        assert resolve(None, True).backend == "pallas"
+        assert resolve(None, False).backend == "xla"
+        assert resolve(Execution(backend="xla"), True).backend == "xla"
+
+
+class TestEnsemble:
+    def test_members_independent_and_match_solo(self):
+        model = DRModel(stages=(RPStage(16, 8), EASIStage.rotation(8, 4, mu=1e-3)),
+                        block_size=16)
+        ens = model.ensemble(3)
+        key = jax.random.PRNGKey(11)
+        x = jax.random.normal(jax.random.PRNGKey(12), (128, 16))
+        est = ens.init(key)
+        est = ens.fit(est, x, epochs=2)
+        ye = ens.transform(est, x[:8])
+        assert ye.shape == (3, 8, 4)
+        # member i == the solo model run from the same member key
+        keys = jax.random.split(key, 3)
+        solo = model.fit(model.init(keys[1]), x, epochs=2)
+        np.testing.assert_allclose(np.asarray(est.stages[1][1]),
+                                   np.asarray(solo.stages[1]),
+                                   rtol=1e-5, atol=1e-6)
+        # members differ (different random inits)
+        assert float(jnp.abs(est.stages[1][0] - est.stages[1][2]).max()) > 1e-4
+
+
+class TestServeEndpoint:
+    def test_sharded_transform_matches_eager(self):
+        from repro.launch.mesh import make_smoke_mesh
+        from repro.serve import dr_serve
+
+        model = DRModel(stages=(RPStage(32, 16), EASIStage.rotation(16, 8)))
+        st = model.init(jax.random.PRNGKey(13))
+        x = jax.random.normal(jax.random.PRNGKey(14), (64, 32))
+        mesh = make_smoke_mesh(1)
+        step = dr_serve.make_dr_transform(model, mesh, batch_size=64)
+        np.testing.assert_allclose(np.asarray(step(st, x)),
+                                   np.asarray(model.transform(st, x)),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_ensemble_serving(self):
+        from repro.launch.mesh import make_smoke_mesh
+        from repro.serve import dr_serve
+
+        model = DRModel(stages=(EASIStage.whiten(16, 4),))
+        est = model.ensemble(2).init(jax.random.PRNGKey(15))
+        x = jax.random.normal(jax.random.PRNGKey(16), (8, 16))
+        step = dr_serve.make_dr_transform(model, make_smoke_mesh(1),
+                                          batch_size=8, ensemble=2)
+        assert step(est, x).shape == (2, 8, 4)
+
+
+class TestPipelineDRModel:
+    def test_two_stage_accepts_model_and_config(self):
+        from repro.core import pipeline
+
+        x = jax.random.normal(jax.random.PRNGKey(17), (512, 16))
+        y = jax.random.randint(jax.random.PRNGKey(18), (512,), 0, 3)
+        model = DRModel(stages=(RPStage(16, 8), EASIStage.rotation(8, 4, mu=5e-4)),
+                        block_size=16)
+        legacy = dr_unit.DRConfig(kind="rp_easi", m=16, p=8, n=4, mu=5e-4,
+                                  block_size=16)
+        accs = {}
+        for tag, dr in (("model", model), ("config", legacy)):
+            cfg = pipeline.TwoStageConfig(dr=dr, dr_epochs=1, head_epochs=3, seed=0)
+            fitted = pipeline.fit_two_stage(cfg, x, y)
+            assert isinstance(fitted["dr_state"], ModelState)
+            assert fitted["dr_state"].b.shape == (4, 8)
+            accs[tag] = pipeline.evaluate(fitted, x, y)
+        # same stages, same seed, same key convention → identical accuracy
+        assert accs["model"] == accs["config"]
