@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   table2_cost     — paper Table II (hardware-cost model + m/p scaling)
   ica_quality     — Amari distance vs block size (TPU estimator parity)
   throughput      — DR update/transform μs/call (CPU; kernels interpret-mode)
+  serve_latency   — DRService p50/p99 + throughput vs batch-bucket policy
   roofline_table  — §Roofline rows aggregated from the dry-run JSONs
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
@@ -17,12 +18,14 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import ica_quality, roofline_table, table1_accuracy, table2_cost, throughput
+from benchmarks import (ica_quality, roofline_table, serve_latency,
+                        table1_accuracy, table2_cost, throughput)
 
 SUITES = {
     "table2_cost": table2_cost,
     "ica_quality": ica_quality,
     "throughput": throughput,
+    "serve_latency": serve_latency,
     "table1_accuracy": table1_accuracy,
     "roofline_table": roofline_table,
 }

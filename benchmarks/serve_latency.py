@@ -1,0 +1,147 @@
+"""Serving-engine latency: open-loop synthetic load vs batch-bucket policy.
+
+Protocol (EXPERIMENTS.md §Serving): a ragged request stream (lognormal row
+counts, fixed seed) is submitted to a `DRService` in fixed-size admission
+windows — open-loop: the window arrives regardless of service progress —
+then `flush()` coalesces each window into bucketed micro-batches.  Per
+request we record submit→result wall time; rows report p50/p99 latency,
+steady-state throughput, the compile count, and the padding overhead for
+each bucket policy:
+
+  pow2   — powers-of-two padding (the engine default): O(log max/min)
+           compiled programs, some padded rows.
+  exact  — no coalescing headroom (`batching.EXACT`), the pre-engine
+           behavior: one compiled program per distinct request size.
+
+A train-while-serve row exercises the full register → serve_and_update →
+promote → transform round trip on the same stream.
+
+Run: PYTHONPATH=src python benchmarks/serve_latency.py [--smoke] [--full]
+(or through `python -m benchmarks.run --only serve_latency`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dr import DRModel, EASIStage, RPStage
+from repro.serve import DRService, BucketPolicy
+from repro.serve.batching import EXACT
+
+
+def _model(m=32, p=16, n=8, block=8):
+    return DRModel(stages=(RPStage(m, p), EASIStage.rotation(p, n, mu=5e-4)),
+                   block_size=block)
+
+
+def _requests(n_req: int, m: int, *, seed: int = 0, max_rows: int = 48):
+    """Ragged synthetic load: lognormal row counts in [1, max_rows]."""
+    rng = np.random.RandomState(seed)
+    sizes = np.clip(np.rint(rng.lognormal(mean=1.6, sigma=0.9, size=n_req)),
+                    1, max_rows).astype(int)
+    return [jnp.asarray(rng.randn(s, m).astype(np.float32)) for s in sizes]
+
+
+def _drive(svc: DRService, name: str, reqs, window: int, *, direct: bool = False):
+    """Submit in open-loop windows, flush per window; returns per-request
+    latencies (s) and the wall time of the measured phase.  `direct=True`
+    bypasses the micro-batcher — one device step per request, the
+    pre-engine serving shape."""
+    lat = []
+    t_start = time.perf_counter()
+    for w0 in range(0, len(reqs), window):
+        batch = reqs[w0:w0 + window]
+        if direct:
+            for x in batch:
+                s = time.perf_counter()
+                jax.block_until_ready(svc.transform(name, x))
+                lat.append(time.perf_counter() - s)
+            continue
+        submit_t, tickets = [], []
+        for x in batch:
+            submit_t.append(time.perf_counter())
+            tickets.append(svc.submit(name, x))
+        svc.flush()
+        for t in tickets:
+            jax.block_until_ready(t.result())
+        done = time.perf_counter()
+        lat.extend(done - s for s in submit_t)
+    return np.asarray(lat), time.perf_counter() - t_start
+
+
+def run(fast: bool = True):
+    n_req = 64 if fast else 512
+    window = 8
+    model = _model()
+    state = model.init(jax.random.PRNGKey(0))
+    reqs = _requests(n_req, model.in_dim)
+    total_rows = int(sum(r.shape[0] for r in reqs))
+
+    rows = []
+    policies = (("pow2", BucketPolicy(min_bucket=4, max_bucket=64)),
+                ("exact", EXACT))
+    for tag, policy in policies:
+        direct = policy.exact
+        svc = DRService(buckets=policy, compile_cache_size=128)
+        svc.register("dr", model, state)
+        _drive(svc, "dr", reqs, window, direct=direct)  # warmup: pay compiles
+        compiles = svc.cache.misses
+        lat, wall = _drive(svc, "dr", reqs, window, direct=direct)
+        met = svc.metrics()
+        p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
+        pad_frac = met["padded_rows"] / max(1, met["padded_rows"] + met["served_rows"])
+        rows.append((f"serve_latency/{tag}", p50 * 1e6,
+                     f"p99_us={p99 * 1e6:.1f};rows_per_s={total_rows / wall:.0f};"
+                     f"compiles={compiles};padded_frac={pad_frac:.3f};"
+                     f"batches={met['batches_run']}"))
+
+    # train-while-serve: the full round trip on the same stream
+    svc = DRService(buckets=BucketPolicy(min_bucket=4, max_bucket=64))
+    svc.register("dr", model, state)
+    bs = model.block_size
+    stream = jnp.concatenate(reqs, axis=0)
+    blocks = stream[: (stream.shape[0] // bs) * bs].reshape(-1, bs, model.in_dim)
+    t0 = time.perf_counter()
+    for blk in blocks:
+        jax.block_until_ready(svc.serve_and_update("dr", blk))
+    wall = time.perf_counter() - t0
+    v = svc.promote("dr")
+    y = svc.transform("dr", reqs[0])
+    assert bool(jnp.isfinite(y).all()) and v == 1
+    rows.append(("serve_latency/train_while_serve",
+                 wall / max(1, len(blocks)) * 1e6,
+                 f"blocks={len(blocks)};promoted_version={v};"
+                 f"updates={svc.metrics()['updates_applied']['dr']}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast run + sanity assertions (CI)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    rows = run(fast=not args.full)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if args.smoke:
+        by = {n: d for n, _, d in rows}
+        pow2_compiles = int(by["serve_latency/pow2"].split("compiles=")[1].split(";")[0])
+        exact_compiles = int(by["serve_latency/exact"].split("compiles=")[1].split(";")[0])
+        # the bucketed compile universe must be tiny and beat exact shapes
+        assert pow2_compiles <= 6, pow2_compiles
+        assert pow2_compiles < exact_compiles, (pow2_compiles, exact_compiles)
+        assert "promoted_version=1" in by["serve_latency/train_while_serve"]
+        print("SERVE_LATENCY_SMOKE_OK")
+
+
+if __name__ == "__main__":
+    main()

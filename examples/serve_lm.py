@@ -1,5 +1,17 @@
-"""Batched serving: prefill a batch of prompts, decode greedily with the KV
-cache (ring-buffered for SWA archs), on the reduced h2o-danube3 config.
+"""Batched LM serving driven through the serving engine.
+
+Two request paths, one engine story:
+
+  * LM tokens — prefill a batch of prompts, decode greedily with the KV
+    cache; the prefill/decode jits now come from the serving layer's
+    bounded compile cache (`repro.serve.serve_step`), so re-making a
+    factory for the same (config, mesh, shapes) is a cache hit.
+  * DR features — each request carries a ragged block of feature frames
+    (the paper's deployment side).  A `DRService` serves them through
+    dynamic micro-batching (powers-of-two buckets) while ALSO streaming
+    the same traffic through `model.update` (train-while-serve); the
+    retrained state is promoted live at the end — the paper's
+    train+deploy-on-one-datapath, at service level.
 
 Run: PYTHONPATH=src python examples/serve_lm.py [--tokens 16] [--batch 4]
 """
@@ -9,11 +21,13 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import registry
+from repro.dr import DRModel, EASIStage, RPStage
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import api
-from repro.serve import serve_step
+from repro.serve import DRService, BucketPolicy, serve_step
 
 
 def main():
@@ -22,6 +36,7 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--frame-dim", type=int, default=32)
     args = ap.parse_args()
 
     cfg = registry.get_smoke(args.arch)
@@ -29,6 +44,26 @@ def main():
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab_size)
     cache_size = args.prompt_len + args.tokens
+
+    # ---- DR feature path: register once, serve ragged traffic -------------
+    dr = DRModel(stages=(RPStage(args.frame_dim, 16),
+                         EASIStage.rotation(16, 8, mu=5e-4)), block_size=8)
+    svc = DRService(buckets=BucketPolicy(min_bucket=8, max_bucket=64))
+    svc.register("frames", dr, dr.init(jax.random.PRNGKey(2)))
+
+    rng = np.random.RandomState(3)
+    frames = [jnp.asarray(rng.randn(int(n), args.frame_dim).astype(np.float32))
+              for n in rng.randint(5, 40, size=args.batch)]
+    tickets = [svc.submit("frames", f) for f in frames]
+    svc.flush()
+    reduced = [t.result() for t in tickets]
+
+    # train-while-serve on the same traffic, then hot-swap the state
+    stream = jnp.concatenate(frames, axis=0)
+    blocks = stream[: (stream.shape[0] // 8) * 8].reshape(-1, 8, args.frame_dim)
+    for blk in blocks:
+        svc.serve_and_update("frames", blk)
+    live_version = svc.promote("frames")
 
     mesh = make_smoke_mesh()
     with mesh:
@@ -50,9 +85,18 @@ def main():
     print(f"arch={cfg.name} (smoke) window={cfg.sliding_window} "
           f"cache={cache['k'].shape}")
     for i in range(args.batch):
-        print(f"req {i}: prompt={prompts[i, :8].tolist()}… -> {gen[i].tolist()}")
+        print(f"req {i}: prompt={prompts[i, :8].tolist()}… -> {gen[i].tolist()} "
+              f"| frames {frames[i].shape[0]}x{args.frame_dim} -> "
+              f"{tuple(reduced[i].shape)}")
     print(f"decode: {args.tokens - 1} steps × batch {args.batch} in {dt*1e3:.0f} ms "
           f"({(args.tokens-1)*args.batch/dt:.0f} tok/s on CPU smoke config)")
+    met = svc.metrics()
+    print(f"DR service: {met['served_rows']} rows in {met['batches_run']} "
+          f"micro-batches, {met['compile_cache']['misses']} compiles "
+          f"({met['padded_rows']} padded rows), "
+          f"train-while-serve promoted v{live_version} "
+          f"after {met['updates_applied']['frames']} updates")
+    print(f"LM step cache: {serve_step._CACHE.stats()}")
 
 
 if __name__ == "__main__":

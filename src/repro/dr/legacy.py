@@ -58,7 +58,8 @@ def legacy_to_model_state(model: DRModel, legacy_state: Any) -> ModelState:
     states = []
     for stage in model.stages:
         states.append(legacy_state.b if stage.trainable else legacy_state.r)
-    return ModelState(stages=tuple(states), steps=legacy_state.steps)
+    return ModelState(stages=tuple(states), steps=legacy_state.steps,
+                      trainable=model.trainable_mask)
 
 
 def model_to_legacy_fields(state: ModelState) -> Tuple[Any, Any, Any]:

@@ -18,7 +18,8 @@ The execution backend is resolved once here (no per-call flags), and
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+import functools
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,27 +31,80 @@ from repro.dr.stages import EASIStage, RPStage, Stage
 PyTree = Any
 
 
-class ModelState(NamedTuple):
-    """Per-stage states (bare arrays) + an update counter. A JAX pytree."""
+@jax.tree_util.register_pytree_with_keys_class
+class ModelState:
+    """Per-stage states (bare arrays) + an update counter. A JAX pytree.
 
-    stages: Tuple[PyTree, ...]
-    steps: jax.Array
+    `trainable` is STATIC aux data — a per-stage bool mask recorded by the
+    `DRModel` that built the state — so the `r`/`b` accessors resolve by
+    stage type (first non-trainable / last trainable stage) instead of
+    sniffing array dtypes.  The pytree children (and hence checkpoint key
+    paths and shardings) are exactly the old NamedTuple's: (stages, steps).
+    """
+
+    __slots__ = ("stages", "steps", "trainable")
+
+    def __init__(self, stages: Tuple[PyTree, ...], steps: jax.Array,
+                 trainable: Optional[Tuple[bool, ...]] = None):
+        self.stages = tuple(stages) if type(stages) is list else stages
+        self.steps = steps
+        self.trainable = None if trainable is None else tuple(trainable)
+
+    # ---- pytree protocol (structure identical to the old NamedTuple) ------
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("stages"), self.stages),
+                 (jax.tree_util.GetAttrKey("steps"), self.steps)),
+                self.trainable)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(stages=children[0], steps=children[1], trainable=aux)
+
+    def _replace(self, **kw) -> "ModelState":
+        out = ModelState(stages=kw.pop("stages", self.stages),
+                         steps=kw.pop("steps", self.steps),
+                         trainable=kw.pop("trainable", self.trainable))
+        if kw:
+            raise ValueError(f"Got unexpected field names: {sorted(kw)}")
+        return out
+
+    def __repr__(self):
+        return (f"ModelState(stages={self.stages!r}, steps={self.steps!r}, "
+                f"trainable={self.trainable!r})")
 
     # Convenience accessors for the overwhelmingly common RP→EASI shapes.
     @property
     def r(self) -> Optional[jax.Array]:
-        """First static ternary matrix (int8), if any."""
-        for s in self.stages:
-            if s is not None and hasattr(s, "dtype") and s.dtype == jnp.int8:
-                return s
-        return None
+        """The first static (non-trainable) stage's matrix — RP's ternary
+        R in every paper configuration — if any."""
+        if self.trainable is not None:
+            for s, t in zip(self.stages, self.trainable):
+                if not t:
+                    return s
+            return None
+        return self._sniff(static=True)
 
     @property
     def b(self) -> Optional[jax.Array]:
-        """Last adaptive separation matrix (float), if any."""
-        for s in reversed(self.stages):
-            if s is not None and hasattr(s, "dtype") \
-                    and jnp.issubdtype(s.dtype, jnp.floating):
+        """The last trainable stage's matrix — the adaptive separation /
+        whitening B — if any."""
+        if self.trainable is not None:
+            for s, t in zip(reversed(self.stages), reversed(self.trainable)):
+                if t:
+                    return s
+            return None
+        return self._sniff(static=False)
+
+    def _sniff(self, *, static: bool) -> Optional[jax.Array]:
+        # Fallback for states built without a mask (hand-rolled in tests or
+        # restored through a bare tuple): the historical dtype heuristic.
+        order = self.stages if static else tuple(reversed(self.stages))
+        for s in order:
+            if s is None or not hasattr(s, "dtype"):
+                continue
+            if static and s.dtype == jnp.int8:
+                return s
+            if not static and jnp.issubdtype(s.dtype, jnp.floating):
                 return s
         return None
 
@@ -85,6 +139,10 @@ class DRModel:
     def dims(self) -> Tuple[int, ...]:
         return (self.in_dim,) + tuple(s.out_dim for s in self.stages)
 
+    @property
+    def trainable_mask(self) -> Tuple[bool, ...]:
+        return tuple(s.trainable for s in self.stages)
+
     def with_execution(self, exe: Execution) -> "DRModel":
         return dataclasses.replace(self, execution=exe)
 
@@ -109,7 +167,8 @@ class DRModel:
             else:
                 states.append(stage.init(static_keys[i_s], self.execution))
                 i_s += 1
-        return ModelState(stages=tuple(states), steps=jnp.zeros((), jnp.int32))
+        return ModelState(stages=tuple(states), steps=jnp.zeros((), jnp.int32),
+                          trainable=self.trainable_mask)
 
     # ---- inference ---------------------------------------------------------
     def transform(self, state: ModelState, x: jax.Array) -> jax.Array:
@@ -129,7 +188,8 @@ class DRModel:
         for stage, s in zip(self.stages, state.stages):
             new_states.append(stage.update(s, h, self.execution))
             h = stage.transform(s, h, self.execution)
-        return ModelState(stages=tuple(new_states), steps=state.steps + 1)
+        return ModelState(stages=tuple(new_states), steps=state.steps + 1,
+                          trainable=self.trainable_mask)
 
     def fit(self, state: ModelState, x: jax.Array, *, epochs: int = 1) -> ModelState:
         """Stream a dataset x (N, m) through `update` in block_size blocks.
@@ -158,32 +218,20 @@ class DRModel:
                                      block_size=self.block_size, epochs=epochs)
             new_states = state.stages[:i] + (b,)
             return ModelState(stages=tuple(new_states),
-                              steps=state.steps + jnp.int32(nblocks))
+                              steps=state.steps + jnp.int32(nblocks),
+                              trainable=self.trainable_mask)
 
         # general cascade: scan blocks through the adaptive suffix
         per_epoch = n_samples // self.block_size
         blocks = h[: per_epoch * self.block_size].reshape(
             per_epoch, self.block_size, suffix[0].in_dim)
-        exe = self.execution
-
-        def body(carry, blk):
-            hb = blk
-            new = []
-            for stage, s in zip(suffix, carry):
-                new.append(stage.update(s, hb, exe))
-                hb = stage.transform(s, hb, exe)
-            return tuple(new), None
-
-        @jax.jit
-        def one_epoch(carry):
-            out, _ = jax.lax.scan(body, carry, blocks)
-            return out
-
+        one_epoch = _epoch_fn(suffix, self.execution)
         carry = tuple(state.stages[i:])
         for _ in range(epochs):
-            carry = one_epoch(carry)
+            carry = one_epoch(carry, blocks)
         return ModelState(stages=tuple(state.stages[:i]) + carry,
-                          steps=state.steps + jnp.int32(nblocks))
+                          steps=state.steps + jnp.int32(nblocks),
+                          trainable=self.trainable_mask)
 
     # ---- cost model / sharding --------------------------------------------
     def mac_counts(self) -> Dict[str, Any]:
@@ -197,14 +245,41 @@ class DRModel:
         }
 
     def shard_specs(self, mesh: Optional[Mesh]) -> ModelState:
-        """PartitionSpec tree shaped like a ModelState (serving/in_shardings)."""
+        """PartitionSpec tree shaped like a ModelState (serving/in_shardings).
+
+        Carries the same static `trainable` mask as a real state so the
+        spec's treedef matches the argument's under jit in_shardings."""
         return ModelState(
             stages=tuple(s.shard_spec(mesh) for s in self.stages),
-            steps=P())
+            steps=P(), trainable=self.trainable_mask)
 
     # ---- ensembling --------------------------------------------------------
     def ensemble(self, k: int) -> "DREnsemble":
         return DREnsemble(model=self, k=k)
+
+
+@functools.lru_cache(maxsize=32)
+def _epoch_fn(suffix: Tuple[Stage, ...], exe: Execution):
+    """One-epoch scan over an adaptive stage suffix, jitted once per
+    (stage tuple, execution policy) — `jax.jit` then keys the (carry,
+    blocks) SHAPES, so repeated `fit` calls on the general cascade path
+    re-trace only for genuinely new shapes instead of every invocation
+    (the jit used to be rebuilt inside `fit`)."""
+
+    def body(carry, blk):
+        hb = blk
+        new = []
+        for stage, s in zip(suffix, carry):
+            new.append(stage.update(s, hb, exe))
+            hb = stage.transform(s, hb, exe)
+        return tuple(new), None
+
+    @jax.jit
+    def one_epoch(carry, blocks):
+        out, _ = jax.lax.scan(body, carry, blocks)
+        return out
+
+    return one_epoch
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,4 +1,20 @@
-from repro.serve import dr_serve, serve_step
-from repro.serve.dr_serve import dr_transform, make_dr_transform
+"""repro.serve — online serving for DR models and LM stacks.
 
-__all__ = ["serve_step", "dr_serve", "dr_transform", "make_dr_transform"]
+The engine (`repro.serve.engine.DRService`) is the front door: model
+registry + dynamic micro-batching + train-while-serve.  `dr_transform`
+and the prefill/decode factories remain as thin adapters over the same
+bounded compile cache for one-shot callers.
+"""
+
+from repro.serve import batching, dr_serve, engine, registry, serve_step
+from repro.serve.batching import BoundedCompileCache, BucketPolicy, MicroBatcher, QueueFull
+from repro.serve.dr_serve import dr_transform, make_dr_transform
+from repro.serve.engine import DRService
+from repro.serve.registry import ModelRegistry
+
+__all__ = [
+    "engine", "registry", "batching", "serve_step", "dr_serve",
+    "DRService", "ModelRegistry",
+    "BucketPolicy", "BoundedCompileCache", "MicroBatcher", "QueueFull",
+    "dr_transform", "make_dr_transform",
+]

@@ -17,13 +17,13 @@ transform maps one replicated state-stack over the sharded batch.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.dist import sharding as shard_rules
+from repro.serve.batching import BoundedCompileCache
 
 
 def _to_sh(spec, mesh):
@@ -64,12 +64,20 @@ def make_dr_transform(model, mesh: Mesh, *, batch_size: Optional[int] = None,
     )
 
 
-@functools.lru_cache(maxsize=64)
+# Bounded LRU over compiled steps (an unbounded cache here pins every mesh
+# a step was ever compiled for — see repro.serve.batching).  `DRService`
+# keeps its own instance; this one backs the module-level convenience call.
+_CACHE = BoundedCompileCache(maxsize=64)
+
+
 def _cached_transform(model, mesh: Mesh, shard_batch: bool):
     # batch_size=None → shard the batch axis; 1 → force replicated layout
     # (n_dp never divides 1 on a multi-device mesh, and on a 1-device mesh
     # the spec degrades to replicated anyway)
-    return make_dr_transform(model, mesh, batch_size=None if shard_batch else 1)
+    return _CACHE.get_or_build(
+        (model, mesh, shard_batch),
+        lambda: make_dr_transform(model, mesh,
+                                  batch_size=None if shard_batch else 1))
 
 
 def dr_transform(model, state, x, *, mesh: Optional[Mesh] = None):

@@ -1,0 +1,251 @@
+"""`DRService` — the unified online serving engine for DR models.
+
+The paper's point is one reconfigurable datapath for BOTH training and
+deployment; this is that story at service level.  One `DRService` owns:
+
+  * a model registry (`repro.serve.registry`) — named models, versioned
+    states, atomic hot-swap: a retrained state is `push`ed as a new
+    version and `promote()`d under a lock, so in-flight requests always
+    see one consistent (model, state) pair;
+  * dynamic micro-batching (`repro.serve.batching`) — ragged client
+    requests coalesce through an admission queue into powers-of-two
+    bucketed batch shapes, so the compile universe is O(log max_bucket)
+    programs per model instead of one per client batch size, all held in
+    a bounded LRU compile cache (evicting actually frees the jitted
+    closure and any mesh it pins);
+  * train-while-serve — `serve_and_update` answers a request with the
+    LIVE state while streaming the same traffic (a configurable fraction
+    of it) through `model.update` into a STAGED state; `promote()` makes
+    the staged state live, `rollback()` reverts.  Streaming every block
+    through `serve_and_update` then promoting reproduces an offline
+    `model.fit` with the same block order — tests pin that equivalence.
+
+Typical use:
+
+    svc = DRService(mesh=make_production_mesh())
+    svc.register("waveform", model, state)
+    y = svc.transform("waveform", x)          # one-shot, bucket-padded
+
+    t1 = svc.submit("waveform", x1)           # ragged micro-batched path
+    t2 = svc.submit("waveform", x2)
+    svc.flush()
+    y1, y2 = t1.result(), t2.result()
+
+    y = svc.serve_and_update("waveform", block)   # train-while-serve
+    svc.promote("waveform")                       # retrained state goes live
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Hashable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.serve import dr_serve
+from repro.serve.batching import BoundedCompileCache, BucketPolicy, MicroBatcher
+from repro.serve.registry import ModelRegistry, Snapshot
+
+PyTree = Any
+
+
+def _pad_rows(x: jax.Array, bucket: int) -> jax.Array:
+    pad = bucket - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+
+
+class DRService:
+    """Online serving engine: registry + micro-batching + train-while-serve."""
+
+    def __init__(self, *, mesh: Optional[Mesh] = None,
+                 buckets: BucketPolicy = BucketPolicy(),
+                 compile_cache_size: int = 32,
+                 max_queue: int = 4096,
+                 update_fraction: float = 1.0):
+        if not 0.0 <= update_fraction <= 1.0:
+            raise ValueError("update_fraction must be in [0, 1]")
+        self.mesh = mesh
+        self.buckets = buckets
+        self.registry = ModelRegistry()
+        self.cache = BoundedCompileCache(compile_cache_size)
+        self.batcher = MicroBatcher(max_queue=max_queue)
+        self.update_fraction = update_fraction
+        # train-while-serve bookkeeping (per model name)
+        self._staged: Dict[str, PyTree] = {}
+        self._accum: Dict[str, float] = {}
+        self._updates: Dict[str, int] = {}
+        # serving metrics
+        self.served_rows = 0
+        self.padded_rows = 0
+        self.batches_run = 0
+
+    # ---- registry facade ---------------------------------------------------
+    def register(self, name: str, model: Any, state: PyTree, *,
+                 ensemble: Optional[int] = None, replace: bool = False) -> int:
+        return self.registry.register(name, model, state, ensemble=ensemble,
+                                      replace=replace)
+
+    def promote(self, name: str, version: Optional[int] = None) -> int:
+        """Make a state version live.  With no explicit `version`, promotes
+        the state staged by `serve_and_update` (pushing it as a new
+        version first) — the online-retrain hot-swap."""
+        if version is None:
+            staged = self._staged.pop(name, None)
+            if staged is None:
+                raise RuntimeError(
+                    f"nothing staged for {name!r}; run serve_and_update first "
+                    f"or pass an explicit version")
+            version = self.registry.push(name, staged)
+        return self.registry.promote(name, version)
+
+    def rollback(self, name: str) -> int:
+        return self.registry.rollback(name)
+
+    def staged_state(self, name: str) -> Optional[PyTree]:
+        return self._staged.get(name)
+
+    # ---- one-shot serving --------------------------------------------------
+    def transform(self, name: str, x: jax.Array) -> jax.Array:
+        """Serve one request (B, m) → (B, n) (ensembles: (k, B, n)) with the
+        live state, padded to the bucket shape and run through the bounded
+        compile cache.  Requests above max_bucket are chunked."""
+        snap = self.registry.get(name)
+        self._check_request(snap, x)
+        return self._serve_rows(snap, x)
+
+    # ---- micro-batched serving ---------------------------------------------
+    def submit(self, name: str, x: jax.Array):
+        """Enqueue a ragged request; returns a Ticket resolved by `flush`.
+        Raises `batching.QueueFull` past max_queue rows (backpressure)."""
+        snap = self.registry.get(name)          # fail fast on unknown names
+        self._check_request(snap, x)
+        return self.batcher.submit(name, x, int(x.shape[0]))
+
+    def flush(self) -> int:
+        """Coalesce the queue into bucketed batches, run them, resolve every
+        ticket with its own rows.  Returns the number of device batches."""
+        n0 = self.batches_run
+        for name, items in self.batcher.drain():
+            tickets = [t for _, t in items]
+            try:
+                snap = self.registry.get(name)
+                xcat = items[0][0] if len(items) == 1 else \
+                    jnp.concatenate([p for p, _ in items], axis=0)
+                ycat = self._serve_rows(snap, xcat)
+                off = 0
+                for t in tickets:
+                    sl = ycat[:, off:off + t.rows] if snap.ensemble \
+                        else ycat[off:off + t.rows]
+                    t._resolve(sl)
+                    off += t.rows
+            except Exception as e:          # noqa: BLE001 — fail the tickets
+                for t in tickets:
+                    if not t.done:
+                        t._fail(e)
+        return self.batches_run - n0
+
+    # ---- train-while-serve -------------------------------------------------
+    def serve_and_update(self, name: str, x: jax.Array) -> jax.Array:
+        """Answer `x` with the LIVE state and stream it through
+        `model.update` into the STAGED state (every `1/update_fraction`-th
+        block on average, deterministically via an accumulator).  The
+        staged state chains across calls, so a full stream followed by
+        `promote()` equals an offline `fit` with the same block order."""
+        snap = self.registry.get(name)
+        self._check_request(snap, x)
+        if snap.ensemble:
+            raise NotImplementedError(
+                "train-while-serve targets single models; ensembles are "
+                "serve-only (fit them offline via DREnsemble.fit)")
+        self._accum[name] = self._accum.get(name, 0.0) + self.update_fraction
+        if self._accum[name] < 1.0 - 1e-9:       # skip update on this block
+            return self._serve_rows(snap, x)
+        self._accum[name] -= 1.0
+
+        staged = self._staged.get(name, snap.state)
+        key = ("fused", snap.chash, x.shape, str(x.dtype))
+        model = snap.model      # close over the config only, never the state
+        fused = self.cache.get_or_build(
+            key, lambda: jax.jit(
+                lambda live, st, xb: (model.transform(live, xb),
+                                      model.update(st, xb))))
+        y, new_staged = fused(snap.state, staged, x)
+        self._staged[name] = new_staged
+        self._updates[name] = self._updates.get(name, 0) + 1
+        self.served_rows += int(x.shape[0])
+        self.batches_run += 1
+        return y
+
+    # ---- warmup / metrics --------------------------------------------------
+    def warmup(self, name: str, *, dtype=jnp.float32,
+               buckets: Optional[Sequence[int]] = None) -> int:
+        """Pre-compile the transform for every bucket shape (or the given
+        subset) so first-request latency doesn't eat the trace."""
+        snap = self.registry.get(name)
+        n0 = self.cache.misses
+        for b in (buckets if buckets is not None else self.buckets.buckets()):
+            fn = self._transform_fn(snap, b, jnp.dtype(dtype))
+            # jax.jit is lazy — drive one dummy batch so the trace+compile
+            # happens here, not on the first real request
+            jax.block_until_ready(
+                fn(snap.state, jnp.zeros((b, snap.model.in_dim), dtype)))
+        return self.cache.misses - n0
+
+    def metrics(self) -> Dict[str, Any]:
+        return {
+            "served_rows": self.served_rows,
+            "padded_rows": self.padded_rows,
+            "batches_run": self.batches_run,
+            "updates_applied": dict(self._updates),
+            "staged": sorted(self._staged),
+            "compile_cache": self.cache.stats(),
+            "queue": self.batcher.stats(),
+        }
+
+    # ---- internals ---------------------------------------------------------
+    def _check_request(self, snap: Snapshot, x: jax.Array) -> None:
+        if x.ndim != 2 or x.shape[-1] != snap.model.in_dim:
+            raise ValueError(
+                f"request for {snap.name!r} must be (B, {snap.model.in_dim}); "
+                f"got {x.shape}")
+        if x.shape[0] < 1:
+            raise ValueError("empty request")
+
+    def _transform_fn(self, snap: Snapshot, bucket: int, dtype):
+        key = ("transform", snap.chash, snap.ensemble, self.mesh is not None,
+               bucket, str(dtype))
+
+        def build():
+            if self.mesh is not None:
+                return dr_serve.make_dr_transform(
+                    snap.model, self.mesh, batch_size=bucket,
+                    ensemble=snap.ensemble)
+            fn = snap.model.ensemble(snap.ensemble).transform \
+                if snap.ensemble else snap.model.transform
+            return jax.jit(fn)
+
+        return self.cache.get_or_build(key, build)
+
+    def _serve_rows(self, snap: Snapshot, x: jax.Array) -> jax.Array:
+        """Run (R, m) rows through bucketed batches; returns (R, n) rows in
+        order ((k, R, n) for ensembles)."""
+        outs = []
+        i, step = 0, self.buckets.max_bucket
+        while i < x.shape[0]:
+            chunk = x[i:i + step]
+            rows = chunk.shape[0]
+            bucket = self.buckets.bucket_for(rows)
+            y = self._transform_fn(snap, bucket, x.dtype)(
+                snap.state, _pad_rows(chunk, bucket))
+            outs.append(y[:, :rows] if snap.ensemble else y[:rows])
+            self.padded_rows += bucket - rows
+            self.served_rows += rows
+            self.batches_run += 1
+            i += rows
+        if len(outs) == 1:
+            return outs[0]
+        return jnp.concatenate(outs, axis=1 if snap.ensemble else 0)

@@ -2,22 +2,30 @@
 
 Decode donates the cache (in-place KV update on device); batch shards over
 (pod, data), cache sequence over `model` (SP) per repro.dist.sharding rules.
+
+Both factories are thin adapters over the serving engine's bounded compile
+cache (`repro.serve.batching.BoundedCompileCache`): per (config, mesh,
+shape-signature) the jit is built once and LRU-evicted under pressure, so
+a long-lived server cycling through configs/meshes doesn't pin every
+executable it ever compiled.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.checkpoint import config_hash
 from repro.dist import sharding as shard_rules
 from repro.models import api
 from repro.models.config import ArchConfig
+from repro.serve.batching import BoundedCompileCache
 
 PyTree = Any
+
+_CACHE = BoundedCompileCache(maxsize=32)
 
 
 def _to_sh(spec, mesh):
@@ -25,8 +33,24 @@ def _to_sh(spec, mesh):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def _tree_sig(tree: PyTree):
+    """Hashable (path, shape, dtype) signature of an abstract pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return tuple((jax.tree_util.keystr(kp), tuple(leaf.shape), str(leaf.dtype))
+                 for kp, leaf in flat)
+
+
 def make_prefill(cfg: ArchConfig, mesh: Mesh, params_like: PyTree,
                  batch_like: PyTree, cache_size: int):
+    key = ("prefill", config_hash(cfg), mesh, _tree_sig(params_like),
+           _tree_sig(batch_like), cache_size)
+    return _CACHE.get_or_build(
+        key, lambda: _build_prefill(cfg, mesh, params_like, batch_like,
+                                    cache_size))
+
+
+def _build_prefill(cfg: ArchConfig, mesh: Mesh, params_like: PyTree,
+                   batch_like: PyTree, cache_size: int):
     pspec = shard_rules.param_specs(params_like, mesh)
     bspec = shard_rules.train_batch_specs(batch_like, mesh)
     cache_like = jax.eval_shape(
@@ -45,6 +69,13 @@ def make_prefill(cfg: ArchConfig, mesh: Mesh, params_like: PyTree,
 
 
 def make_decode(cfg: ArchConfig, mesh: Mesh, params_like: PyTree, cache_like: PyTree):
+    key = ("decode", config_hash(cfg), mesh, _tree_sig(params_like),
+           _tree_sig(cache_like))
+    return _CACHE.get_or_build(
+        key, lambda: _build_decode(cfg, mesh, params_like, cache_like))
+
+
+def _build_decode(cfg: ArchConfig, mesh: Mesh, params_like: PyTree, cache_like: PyTree):
     pspec = shard_rules.param_specs(params_like, mesh)
     cspec = shard_rules.cache_specs(cache_like, mesh)
     b = None

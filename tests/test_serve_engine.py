@@ -1,0 +1,397 @@
+"""Serving-engine tests: bucket policy, bounded compile cache (+ eviction),
+model registry hot-swap, ragged micro-batched serving with asserted compile
+counts, ensemble output layout, train-while-serve ≡ offline fit, the hoisted
+epoch compile, stage-type-driven ModelState accessors, and the multi-device
+ragged-batch degrade (subprocess, 8 host devices)."""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dr import DRModel, EASIStage, ModelState, RPStage
+from repro.dr import model as model_mod
+from repro.serve import (BoundedCompileCache, BucketPolicy, DRService,
+                         ModelRegistry, QueueFull, dr_serve)
+from repro.serve.batching import EXACT, MicroBatcher
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _model(m=32, p=16, n=8, block=4):
+    return DRModel(stages=(RPStage(m, p), EASIStage.rotation(p, n, mu=1e-3)),
+                   block_size=block)
+
+
+def _service(model, key=0, **kw):
+    kw.setdefault("buckets", BucketPolicy(min_bucket=4, max_bucket=32))
+    svc = DRService(**kw)
+    state = model.init(jax.random.PRNGKey(key))
+    svc.register("m", model, state)
+    return svc, state
+
+
+class TestBucketPolicy:
+    def test_pow2_padding(self):
+        p = BucketPolicy(min_bucket=4, max_bucket=64)
+        assert [p.bucket_for(n) for n in (1, 4, 5, 8, 9, 33, 64, 200)] == \
+            [4, 4, 8, 8, 16, 64, 64, 64]
+        assert p.buckets() == (4, 8, 16, 32, 64)
+
+    def test_exact_policy(self):
+        assert EXACT.bucket_for(13) == 13
+        assert EXACT.buckets() == ()
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BucketPolicy(min_bucket=8, max_bucket=4)
+        with pytest.raises(ValueError):
+            BucketPolicy(min_bucket=0)
+        with pytest.raises(ValueError):
+            BucketPolicy().bucket_for(0)
+
+
+class TestBoundedCompileCache:
+    def test_lru_eviction_and_counters(self):
+        c = BoundedCompileCache(maxsize=2)
+        c.get_or_build("a", lambda: "A")
+        c.get_or_build("b", lambda: "B")
+        assert c.get_or_build("a", lambda: "A2") == "A"   # hit refreshes LRU
+        c.get_or_build("c", lambda: "C")                   # evicts "b"
+        assert "b" not in c and "a" in c and "c" in c
+        assert len(c) == 2
+        assert (c.hits, c.misses, c.evictions) == (1, 3, 1)
+        assert c.compiles == 3
+
+    def test_dr_transform_cache_is_bounded(self, monkeypatch):
+        """Satellite: the old lru_cache never evicted live meshes — the
+        bounded cache must."""
+        from repro.launch.mesh import make_smoke_mesh
+
+        small = BoundedCompileCache(maxsize=2)
+        monkeypatch.setattr(dr_serve, "_CACHE", small)
+        mesh = make_smoke_mesh(1)
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+        for n in (4, 5, 6):   # three distinct models through a 2-slot cache
+            model = DRModel(stages=(EASIStage.rotation(16, n),))
+            st = model.init(jax.random.PRNGKey(n))
+            y = dr_serve.dr_transform(model, st, x, mesh=mesh)
+            np.testing.assert_allclose(np.asarray(y),
+                                       np.asarray(model.transform(st, x)),
+                                       rtol=1e-6, atol=1e-7)
+        assert len(small) == 2 and small.evictions == 1
+
+
+class TestRegistry:
+    def test_register_get_and_hash_guard(self):
+        reg = ModelRegistry()
+        m1, m2 = _model(), _model(n=4)
+        s1 = m1.init(jax.random.PRNGKey(0))
+        assert reg.register("a", m1, s1) == 0
+        snap = reg.get("a")
+        assert snap.version == 0 and snap.model is m1
+        with pytest.raises(ValueError, match="replace=True"):
+            reg.register("a", m2, m2.init(jax.random.PRNGKey(1)))
+        reg.register("a", m2, m2.init(jax.random.PRNGKey(1)), replace=True)
+        assert reg.get("a").model is m2
+        with pytest.raises(KeyError, match="no model registered"):
+            reg.get("nope")
+
+    def test_versions_promote_rollback(self):
+        reg = ModelRegistry()
+        m = _model()
+        s0 = m.init(jax.random.PRNGKey(0))
+        s1 = m.init(jax.random.PRNGKey(1))
+        reg.register("a", m, s0)
+        v = reg.push("a", s1)
+        assert v == 1 and reg.get("a").version == 0    # push is NOT live yet
+        assert reg.promote("a") == 1
+        assert reg.get("a").version == 1
+        assert reg.rollback("a") == 0
+        assert reg.get("a").version == 0
+        assert reg.n_versions("a") == 2
+        with pytest.raises(IndexError):
+            reg.promote("a", 7)
+
+
+class TestMicroBatchedServing:
+    def test_ragged_stream_bucketed_compile_count(self):
+        """Acceptance: ragged requests serve through bucketed micro-batches
+        with an asserted compile count (one per touched bucket)."""
+        model = _model()
+        svc, st = _service(model)
+        sizes = [3, 7, 1, 5, 12, 2, 9, 30, 4]   # buckets: 4, 8, 16, 32
+        xs = [jax.random.normal(jax.random.PRNGKey(i), (s, 32))
+              for i, s in enumerate(sizes)]
+        for x in xs:                              # one-shot path
+            np.testing.assert_allclose(np.asarray(svc.transform("m", x)),
+                                       np.asarray(model.transform(st, x)),
+                                       rtol=1e-6, atol=1e-7)
+        assert svc.cache.misses == 4              # == touched buckets, not 9
+        # queued path: same answers, still no new compiles for the big
+        # coalesced batch as long as its chunks hit existing buckets
+        tickets = [svc.submit("m", x) for x in xs]
+        assert svc.batcher.queue_depth() == sum(sizes)
+        svc.flush()
+        for t, x in zip(tickets, xs):
+            np.testing.assert_allclose(np.asarray(t.result()),
+                                       np.asarray(model.transform(st, x)),
+                                       rtol=1e-6, atol=1e-7)
+        assert svc.cache.misses == 4
+        met = svc.metrics()
+        assert met["queue"]["queue_depth"] == 0
+        assert met["compile_cache"]["misses"] == 4
+
+    def test_oversize_request_chunks(self):
+        model = _model()
+        svc, st = _service(model)       # max_bucket=32
+        x = jax.random.normal(jax.random.PRNGKey(0), (81, 32))
+        y = svc.transform("m", x)
+        assert y.shape == (81, 8)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(model.transform(st, x)),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_backpressure_queue_full(self):
+        model = _model()
+        svc, _ = _service(model, max_queue=16)
+        svc.submit("m", jnp.ones((10, 32)))
+        with pytest.raises(QueueFull):
+            svc.submit("m", jnp.ones((7, 32)))
+        assert svc.batcher.rejected == 1
+        svc.flush()
+        svc.submit("m", jnp.ones((7, 32)))        # drained queue admits again
+
+    def test_request_validation(self):
+        svc, _ = _service(_model())
+        with pytest.raises(ValueError, match=r"\(B, 32\)"):
+            svc.transform("m", jnp.ones((4, 31)))
+        with pytest.raises(ValueError):
+            svc.transform("m", jnp.ones((4,)))
+        with pytest.raises(KeyError):
+            svc.transform("ghost", jnp.ones((4, 32)))
+
+    def test_warmup_precompiles_buckets(self):
+        svc, _ = _service(_model())
+        n = svc.warmup("m")
+        assert n == len(svc.buckets.buckets())
+        assert svc.warmup("m") == 0               # all cached now
+
+    def test_ensemble_serving_layout(self):
+        """Acceptance: ensemble output layout (k, B, n), ragged B."""
+        model = _model()
+        k = 3
+        est = model.ensemble(k).init(jax.random.PRNGKey(4))
+        svc = DRService(buckets=BucketPolicy(min_bucket=4, max_bucket=16))
+        svc.register("ens", model, est, ensemble=k)
+        xs = [jax.random.normal(jax.random.PRNGKey(i), (s, 32))
+              for i, s in enumerate((5, 11, 3))]
+        tickets = [svc.submit("ens", x) for x in xs]
+        svc.flush()
+        for t, x in zip(tickets, xs):
+            y = t.result()
+            assert y.shape == (k, x.shape[0], 8)
+            np.testing.assert_allclose(
+                np.asarray(y),
+                np.asarray(model.ensemble(k).transform(est, x)),
+                rtol=1e-5, atol=1e-6)
+        # oversize ensemble request chunks along the batch (middle) axis
+        xb = jax.random.normal(jax.random.PRNGKey(9), (37, 32))
+        assert svc.transform("ens", xb).shape == (k, 37, 8)
+
+    def test_microbatcher_fifo_groups(self):
+        mb = MicroBatcher(max_queue=100)
+        mb.submit("a", "x0", 1)
+        mb.submit("b", "x1", 2)
+        mb.submit("a", "x2", 3)
+        groups = mb.drain()
+        assert [g[0] for g in groups] == ["a", "b"]
+        assert [p for p, _ in groups[0][1]] == ["x0", "x2"]
+        assert mb.drain() == []
+
+
+class TestTrainWhileServe:
+    def test_round_trip_equals_offline_fit(self):
+        """Acceptance: register → serve_and_update → promote → transform.
+        The promoted state equals `model.fit` over the same block order."""
+        model = _model(block=4)
+        svc, st = _service(model)
+        x = jax.random.normal(jax.random.PRNGKey(5), (64, 32))
+        blocks = x.reshape(16, 4, 32)
+        for blk in blocks:
+            y = svc.serve_and_update("m", blk)
+            # serving answers come from the LIVE (v0) state throughout
+            np.testing.assert_allclose(np.asarray(y),
+                                       np.asarray(model.transform(st, blk)),
+                                       rtol=1e-6, atol=1e-7)
+        # not live until promoted
+        assert svc.registry.get("m").version == 0
+        assert svc.staged_state("m") is not None
+        v = svc.promote("m")
+        assert v == 1 and svc.registry.get("m").version == 1
+
+        fitted = model.fit(st, x, epochs=1)
+        promoted = svc.registry.get("m").state
+        for a, b in zip(jax.tree.leaves(promoted), jax.tree.leaves(fitted)):
+            np.testing.assert_allclose(np.asarray(a, np.float64),
+                                       np.asarray(b, np.float64),
+                                       rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(svc.transform("m", x[:8])),
+                                   np.asarray(model.transform(fitted, x[:8])),
+                                   rtol=1e-5, atol=1e-6)
+        svc.rollback("m")
+        np.testing.assert_allclose(np.asarray(svc.transform("m", x[:8])),
+                                   np.asarray(model.transform(st, x[:8])),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_update_fraction_half(self):
+        model = _model(block=4)
+        svc, st = _service(model, update_fraction=0.5)
+        blocks = jax.random.normal(jax.random.PRNGKey(6), (8, 4, 32))
+        for blk in blocks:
+            svc.serve_and_update("m", blk)
+        assert svc.metrics()["updates_applied"]["m"] == 4
+        svc.promote("m")
+        # equals offline fit over every OTHER block (the updated half)
+        manual = st
+        for i in range(1, 8, 2):
+            manual = model.update(manual, blocks[i])
+        for a, b in zip(jax.tree.leaves(svc.registry.get("m").state),
+                        jax.tree.leaves(manual)):
+            np.testing.assert_allclose(np.asarray(a, np.float64),
+                                       np.asarray(b, np.float64),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_promote_without_staged_raises(self):
+        svc, _ = _service(_model())
+        with pytest.raises(RuntimeError, match="nothing staged"):
+            svc.promote("m")
+
+    def test_ensemble_is_serve_only(self):
+        model = _model()
+        svc = DRService()
+        svc.register("e", model, model.ensemble(2).init(jax.random.PRNGKey(0)),
+                     ensemble=2)
+        with pytest.raises(NotImplementedError):
+            svc.serve_and_update("e", jnp.ones((4, 32)))
+
+
+class TestEpochCompileCache:
+    def test_repeated_fit_reuses_compiled_epoch(self):
+        """Satellite: the general-cascade epoch program compiles once per
+        (stage suffix, execution), not once per fit call."""
+        model_mod._epoch_fn.cache_clear()
+        model = DRModel(stages=(RPStage(16, 8),
+                                EASIStage.whiten(8, 6),
+                                EASIStage.rotation(6, 4)), block_size=8)
+        st = model.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+        for _ in range(3):
+            st = model.fit(st, x, epochs=2)
+        info = model_mod._epoch_fn.cache_info()
+        assert info.misses == 1 and info.hits >= 2
+        # a different execution policy is a different program
+        model2 = model.with_execution(model.execution.__class__(backend="xla",
+                                                                easi_block_m=256))
+        model2.fit(model2.init(jax.random.PRNGKey(2)), x, epochs=1)
+        assert model_mod._epoch_fn.cache_info().misses == 2
+
+
+class TestModelStateAccessors:
+    def test_mask_driven_r_b(self):
+        """Satellite: r = first non-trainable stage, b = last trainable —
+        by stage type, not dtype sniffing."""
+        model = DRModel(stages=(RPStage(32, 16),
+                                EASIStage.whiten(16, 12),
+                                EASIStage.rotation(12, 8)))
+        st = model.init(jax.random.PRNGKey(0))
+        assert st.trainable == (False, True, True)
+        assert st.r is st.stages[0]
+        assert st.b is st.stages[2]               # LAST trainable, not first
+
+    def test_all_static_and_all_trainable(self):
+        rp_only = DRModel(stages=(RPStage(16, 8),))
+        st = rp_only.init(jax.random.PRNGKey(1))
+        assert st.b is None and st.r is st.stages[0]
+        easi_only = DRModel(stages=(EASIStage.full(16, 8),))
+        st = easi_only.init(jax.random.PRNGKey(2))
+        assert st.r is None and st.b is st.stages[0]
+
+    def test_bf16_trainable_stage_still_resolves(self):
+        model = DRModel(stages=(RPStage(16, 8),
+                                EASIStage.rotation(8, 4, dtype=jnp.bfloat16)))
+        st = model.init(jax.random.PRNGKey(3))
+        assert st.b is st.stages[1] and st.b.dtype == jnp.bfloat16
+
+    def test_maskless_fallback_sniffs_dtypes(self):
+        r = jnp.zeros((8, 16), jnp.int8)
+        b = jnp.zeros((4, 8), jnp.float32)
+        st = ModelState(stages=(r, b), steps=jnp.int32(0))
+        assert st.trainable is None
+        assert st.r is r and st.b is b
+
+    def test_mask_survives_tracing_and_tree_ops(self):
+        model = _model()
+        st = model.init(jax.random.PRNGKey(4))
+        st2 = jax.jit(lambda s: s._replace(steps=s.steps + 1))(st)
+        assert st2.trainable == st.trainable
+        st3 = jax.tree.map(lambda a: a, st)
+        assert st3.trainable == st.trainable
+        est = model.ensemble(2).init(jax.random.PRNGKey(5))
+        assert est.trainable == st.trainable
+        # checkpoint-style flatten keeps the NamedTuple-era key paths
+        flat, _ = jax.tree_util.tree_flatten_with_path(st)
+        paths = [jax.tree_util.keystr(kp) for kp, _ in flat]
+        assert paths == [".stages[0]", ".stages[1]", ".steps"]
+
+
+MULTIDEV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.dr import DRModel, EASIStage, RPStage
+from repro.serve import DRService, BucketPolicy, dr_serve
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+model = DRModel(stages=(RPStage(32, 16), EASIStage.rotation(16, 8)))
+st = model.init(jax.random.PRNGKey(0))
+
+# ragged batch: 63 % n_dp(=4) != 0 -> layout degrades to replicated
+x_odd = jax.random.normal(jax.random.PRNGKey(1), (63, 32))
+y_odd = dr_serve.dr_transform(model, st, x_odd, mesh=mesh)
+np.testing.assert_allclose(np.asarray(y_odd), np.asarray(model.transform(st, x_odd)),
+                           rtol=1e-5, atol=1e-6)
+assert y_odd.sharding.is_fully_replicated, y_odd.sharding
+
+# divisible batch stays sharded over the DP axis
+x_even = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+y_even = dr_serve.dr_transform(model, st, x_even, mesh=mesh)
+np.testing.assert_allclose(np.asarray(y_even), np.asarray(model.transform(st, x_even)),
+                           rtol=1e-5, atol=1e-6)
+assert not y_even.sharding.is_fully_replicated, y_even.sharding
+
+# the engine's bucketed path pads every request to a pow2 bucket, which the
+# DP axes divide -> sharded micro-batches even for ragged client requests
+svc = DRService(mesh=mesh, buckets=BucketPolicy(min_bucket=8, max_bucket=64))
+svc.register("m", model, st)
+for rows in (3, 17, 63):
+    xr = jax.random.normal(jax.random.PRNGKey(rows), (rows, 32))
+    np.testing.assert_allclose(np.asarray(svc.transform("m", xr)),
+                               np.asarray(model.transform(st, xr)),
+                               rtol=1e-5, atol=1e-6)
+assert svc.cache.misses == 3
+print("MULTIDEV_SERVE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_ragged_batch_multidevice_subprocess():
+    out = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+                         capture_output=True, text=True, cwd="/root/repo",
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MULTIDEV_SERVE_OK" in out.stdout
