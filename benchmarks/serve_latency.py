@@ -8,10 +8,15 @@ request we record submit→result wall time; rows report p50/p99 latency,
 steady-state throughput, the compile count, and the padding overhead for
 each bucket policy:
 
-  pow2   — powers-of-two padding (the engine default): O(log max/min)
-           compiled programs, some padded rows.
-  exact  — no coalescing headroom (`batching.EXACT`), the pre-engine
-           behavior: one compiled program per distinct request size.
+  pow2     — powers-of-two padding (the engine default): O(log max/min)
+             compiled programs, some padded rows.
+  exact    — no coalescing headroom (`batching.EXACT`), the pre-engine
+             behavior: one compiled program per distinct request size.
+  deadline — pow2 buckets behind the `DeadlineScheduler` event loop: no
+             explicit flush at all; each request carries `max_delay_ms`
+             and the loop flushes on fill-or-deadline.  Reports the
+             deadline-miss rate next to the same compile count as pow2
+             (deadline flushes reuse the bucketed programs).
 
 A train-while-serve row exercises the full register → serve_and_update →
 promote → transform round trip on the same stream.
@@ -30,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dr import DRModel, EASIStage, RPStage
-from repro.serve import DRService, BucketPolicy
+from repro.serve import BucketPolicy, DRService, DeadlineScheduler
 from repro.serve.batching import EXACT
 
 
@@ -47,11 +52,13 @@ def _requests(n_req: int, m: int, *, seed: int = 0, max_rows: int = 48):
     return [jnp.asarray(rng.randn(s, m).astype(np.float32)) for s in sizes]
 
 
-def _drive(svc: DRService, name: str, reqs, window: int, *, direct: bool = False):
-    """Submit in open-loop windows, flush per window; returns per-request
-    latencies (s) and the wall time of the measured phase.  `direct=True`
-    bypasses the micro-batcher — one device step per request, the
-    pre-engine serving shape."""
+def _drive(svc: DRService, name: str, reqs, window: int, *,
+           direct: bool = False, scheduler: DeadlineScheduler = None):
+    """Submit in open-loop windows; returns per-request latencies (s) and
+    the wall time of the measured phase.  `direct=True` bypasses the
+    micro-batcher — one device step per request, the pre-engine serving
+    shape.  With `scheduler`, nothing ever calls flush(): the deadline
+    loop answers, and the driver just waits on the tickets."""
     lat = []
     t_start = time.perf_counter()
     for w0 in range(0, len(reqs), window):
@@ -65,9 +72,13 @@ def _drive(svc: DRService, name: str, reqs, window: int, *, direct: bool = False
         submit_t, tickets = [], []
         for x in batch:
             submit_t.append(time.perf_counter())
-            tickets.append(svc.submit(name, x))
-        svc.flush()
+            tickets.append(scheduler.submit(name, x) if scheduler is not None
+                           else svc.submit(name, x))
+        if scheduler is None:
+            svc.flush()
         for t in tickets:
+            if scheduler is not None:
+                t.wait(30.0)
             jax.block_until_ready(t.result())
         done = time.perf_counter()
         lat.extend(done - s for s in submit_t)
@@ -84,21 +95,34 @@ def run(fast: bool = True):
 
     rows = []
     policies = (("pow2", BucketPolicy(min_bucket=4, max_bucket=64)),
-                ("exact", EXACT))
+                ("exact", EXACT),
+                ("deadline", BucketPolicy(min_bucket=4, max_bucket=64)))
     for tag, policy in policies:
         direct = policy.exact
         svc = DRService(buckets=policy, compile_cache_size=128)
         svc.register("dr", model, state)
-        _drive(svc, "dr", reqs, window, direct=direct)  # warmup: pay compiles
+        sched = DeadlineScheduler(svc, default_max_delay_ms=2.0,
+                                  wake_lead_ms=1.0) \
+            if tag == "deadline" else None
+        _drive(svc, "dr", reqs, window, direct=direct,
+               scheduler=sched)                          # warmup: pay compiles
         compiles = svc.cache.misses
-        lat, wall = _drive(svc, "dr", reqs, window, direct=direct)
+        met0, missed0 = svc.slo.deadline_counts()
+        lat, wall = _drive(svc, "dr", reqs, window, direct=direct,
+                           scheduler=sched)
         met = svc.metrics()
         p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
         pad_frac = met["padded_rows"] / max(1, met["padded_rows"] + met["served_rows"])
-        rows.append((f"serve_latency/{tag}", p50 * 1e6,
-                     f"p99_us={p99 * 1e6:.1f};rows_per_s={total_rows / wall:.0f};"
-                     f"compiles={compiles};padded_frac={pad_frac:.3f};"
-                     f"batches={met['batches_run']}"))
+        derived = (f"p99_us={p99 * 1e6:.1f};rows_per_s={total_rows / wall:.0f};"
+                   f"compiles={compiles};padded_frac={pad_frac:.3f};"
+                   f"batches={met['batches_run']}")
+        if sched is not None:
+            got, missed = (met["deadline_met"] - met0,
+                           met["deadline_missed"] - missed0)
+            derived += (f";deadline_miss_rate="
+                        f"{missed / max(1, got + missed):.3f}")
+            sched.shutdown()
+        rows.append((f"serve_latency/{tag}", p50 * 1e6, derived))
 
     # train-while-serve: the full round trip on the same stream
     svc = DRService(buckets=BucketPolicy(min_bucket=4, max_bucket=64))
@@ -136,9 +160,17 @@ def main():
         by = {n: d for n, _, d in rows}
         pow2_compiles = int(by["serve_latency/pow2"].split("compiles=")[1].split(";")[0])
         exact_compiles = int(by["serve_latency/exact"].split("compiles=")[1].split(";")[0])
+        ddl_compiles = int(by["serve_latency/deadline"].split("compiles=")[1].split(";")[0])
         # the bucketed compile universe must be tiny and beat exact shapes
         assert pow2_compiles <= 6, pow2_compiles
         assert pow2_compiles < exact_compiles, (pow2_compiles, exact_compiles)
+        # deadline flushes reuse the same bucketed programs — no new compiles
+        assert ddl_compiles <= 6, ddl_compiles
+        # miss = flush STARTED past the budget; a scheduler that only ever
+        # drains at shutdown would miss everything — that must not pass
+        miss = float(by["serve_latency/deadline"]
+                     .split("deadline_miss_rate=")[1].split(";")[0])
+        assert 0.0 <= miss < 1.0, miss
         assert "promoted_version=1" in by["serve_latency/train_while_serve"]
         print("SERVE_LATENCY_SMOKE_OK")
 

@@ -1,17 +1,19 @@
 """Batched LM serving driven through the serving engine.
 
-Two request paths, one engine story:
+Two request paths, ONE admission queue, one deadline scheduler:
 
-  * LM tokens — prefill a batch of prompts, decode greedily with the KV
-    cache; the prefill/decode jits now come from the serving layer's
-    bounded compile cache (`repro.serve.serve_step`), so re-making a
-    factory for the same (config, mesh, shapes) is a cache hit.
   * DR features — each request carries a ragged block of feature frames
-    (the paper's deployment side).  A `DRService` serves them through
-    dynamic micro-batching (powers-of-two buckets) while ALSO streaming
-    the same traffic through `model.update` (train-while-serve); the
-    retrained state is promoted live at the end — the paper's
-    train+deploy-on-one-datapath, at service level.
+    (the paper's deployment side).  Requests are submitted with a
+    latency budget (`max_delay_ms`); the `DeadlineScheduler` event loop
+    coalesces them into powers-of-two buckets and flushes on
+    fill-or-deadline — no explicit flush() anywhere.  The same traffic
+    also streams through `model.update` (train-while-serve) and the
+    retrained state is promoted live at the end.
+  * LM tokens — prefill a batch of prompts, decode greedily with the KV
+    cache.  The steps route through the SAME queue (`svc.lm_prefill` /
+    `svc.lm_decode` via the scheduler), compiled into the SAME bounded
+    cache as the DR bucket programs — one scheduler, one LRU, shared
+    backpressure and SLO accounting for both workloads.
 
 Run: PYTHONPATH=src python examples/serve_lm.py [--tokens 16] [--batch 4]
 """
@@ -27,7 +29,7 @@ from repro.configs import registry
 from repro.dr import DRModel, EASIStage, RPStage
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import api
-from repro.serve import DRService, BucketPolicy, serve_step
+from repro.serve import BucketPolicy, DRService, DeadlineScheduler
 
 
 def main():
@@ -45,17 +47,23 @@ def main():
                                  (args.batch, args.prompt_len), 0, cfg.vocab_size)
     cache_size = args.prompt_len + args.tokens
 
-    # ---- DR feature path: register once, serve ragged traffic -------------
+    # ---- one engine, one deadline scheduler for BOTH workloads ------------
     dr = DRModel(stages=(RPStage(args.frame_dim, 16),
                          EASIStage.rotation(16, 8, mu=5e-4)), block_size=8)
     svc = DRService(buckets=BucketPolicy(min_bucket=8, max_bucket=64))
     svc.register("frames", dr, dr.init(jax.random.PRNGKey(2)))
+    # wake_lead_ms=1: wake the loop ~1 ms before each deadline so flushes
+    # start inside their budget despite real-clock wakeup latency
+    sched = DeadlineScheduler(svc, default_max_delay_ms=5.0, wake_lead_ms=1.0)
 
+    # DR feature path: ragged traffic with a 5 ms latency budget — the
+    # scheduler flushes on fill-or-deadline, nobody calls flush()
     rng = np.random.RandomState(3)
     frames = [jnp.asarray(rng.randn(int(n), args.frame_dim).astype(np.float32))
               for n in rng.randint(5, 40, size=args.batch)]
-    tickets = [svc.submit("frames", f) for f in frames]
-    svc.flush()
+    tickets = [sched.submit("frames", f) for f in frames]
+    for t in tickets:
+        t.wait(30.0)
     reduced = [t.result() for t in tickets]
 
     # train-while-serve on the same traffic, then hot-swap the state
@@ -65,21 +73,28 @@ def main():
         svc.serve_and_update("frames", blk)
     live_version = svc.promote("frames")
 
+    # LM path: prefill + greedy decode admitted through the SAME queue,
+    # jitted into the SAME bounded compile cache as the DR buckets.
+    # Decode is sequential, so each step takes a tight 2 ms batching
+    # budget — the loop flushes almost immediately and the step still
+    # counts as deadline-met (the budget bounds queue delay, not compute).
     mesh = make_smoke_mesh()
-    with mesh:
-        prefill = serve_step.make_prefill(cfg, mesh, params, {"tokens": prompts}, cache_size)
-        logits, cache = prefill(params, {"tokens": prompts})
-        decode = serve_step.make_decode(cfg, mesh, params, cache)
+    tp = sched.lm_prefill(cfg, mesh, params, {"tokens": prompts}, cache_size,
+                          max_delay_ms=2.0)
+    tp.wait(60.0)
+    logits, cache = tp.result()
 
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.tokens - 1):
+        td = sched.lm_decode(cfg, mesh, params, tok, cache, max_delay_ms=2.0)
+        td.wait(60.0)
+        logits, cache = td.result()
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out = [tok]
-        t0 = time.perf_counter()
-        for _ in range(args.tokens - 1):
-            logits, cache = decode(params, tok, cache)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out.append(tok)
-        jax.block_until_ready(tok)
-        dt = time.perf_counter() - t0
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
 
     gen = jnp.stack(out, axis=1)
     print(f"arch={cfg.name} (smoke) window={cfg.sliding_window} "
@@ -90,13 +105,22 @@ def main():
               f"{tuple(reduced[i].shape)}")
     print(f"decode: {args.tokens - 1} steps × batch {args.batch} in {dt*1e3:.0f} ms "
           f"({(args.tokens-1)*args.batch/dt:.0f} tok/s on CPU smoke config)")
+    sched.shutdown()
     met = svc.metrics()
-    print(f"DR service: {met['served_rows']} rows in {met['batches_run']} "
-          f"micro-batches, {met['compile_cache']['misses']} compiles "
+    print(f"engine: {met['served_rows']} rows in {met['batches_run']} "
+          f"micro-batches, {met['compile_cache']['misses']} compiles in ONE "
+          f"cache (DR buckets + LM prefill/decode), "
           f"({met['padded_rows']} padded rows), "
           f"train-while-serve promoted v{live_version} "
           f"after {met['updates_applied']['frames']} updates")
-    print(f"LM step cache: {serve_step._CACHE.stats()}")
+    print(f"deadlines: {met['deadline_met']} met / {met['deadline_missed']} "
+          f"missed")
+    for name, cells in met["slo"].items():
+        for bucket, cell in cells.items():
+            e2e = cell["e2e"]
+            print(f"  slo[{name}/{bucket}]: n={e2e['count']} "
+                  f"p50={e2e['p50_ms']:.2f}ms p99={e2e['p99_ms']:.2f}ms "
+                  f"queue_p50={cell['queue_delay']['p50_ms']:.2f}ms")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,31 @@
 """repro.serve — online serving for DR models and LM stacks.
 
 The engine (`repro.serve.engine.DRService`) is the front door: model
-registry + dynamic micro-batching + train-while-serve.  `dr_transform`
-and the prefill/decode factories remain as thin adapters over the same
-bounded compile cache for one-shot callers.
+registry + dynamic micro-batching + train-while-serve + per-bucket SLO
+accounting.  `repro.serve.scheduler.DeadlineScheduler` wraps the engine's
+admission queue in a deadline-driven event loop (flush on fill OR oldest
+deadline, all time through the injectable `repro.serve.clock.Clock`).
+`dr_transform` and the prefill/decode factories remain as thin adapters
+over the same bounded compile cache for one-shot callers.
 """
 
-from repro.serve import batching, dr_serve, engine, registry, serve_step
-from repro.serve.batching import BoundedCompileCache, BucketPolicy, MicroBatcher, QueueFull
+from repro.serve import (batching, clock, dr_serve, engine, registry,
+                         scheduler, serve_step, slo)
+from repro.serve.batching import (BoundedCompileCache, BucketPolicy,
+                                  MicroBatcher, QueueFull, Ticket)
+from repro.serve.clock import Clock, MonotonicClock, VirtualClock
 from repro.serve.dr_serve import dr_transform, make_dr_transform
 from repro.serve.engine import DRService
 from repro.serve.registry import ModelRegistry
+from repro.serve.scheduler import DeadlineScheduler, SchedulerClosed
+from repro.serve.slo import LatencyStats, SLOTracker
 
 __all__ = [
     "engine", "registry", "batching", "serve_step", "dr_serve",
-    "DRService", "ModelRegistry",
+    "scheduler", "clock", "slo",
+    "DRService", "ModelRegistry", "DeadlineScheduler", "SchedulerClosed",
     "BucketPolicy", "BoundedCompileCache", "MicroBatcher", "QueueFull",
+    "Ticket", "Clock", "MonotonicClock", "VirtualClock",
+    "LatencyStats", "SLOTracker",
     "dr_transform", "make_dr_transform",
 ]

@@ -156,25 +156,48 @@ class BoundedCompileCache:
 # ---------------------------------------------------------------------------
 
 class Ticket:
-    """Handle for one submitted request; resolved at flush time."""
+    """Handle for one submitted request; resolved at flush time.
 
-    __slots__ = ("rows", "_result", "_error", "_done")
+    The engine stamps `submitted_at` (clock ms) at admission; callers that
+    want latency bounds set `deadline` (absolute clock ms) — the deadline
+    scheduler flushes a bucket when its oldest ticket's deadline expires,
+    and the SLO tracker counts a miss when the FLUSH STARTS past it (the
+    deadline bounds the batching window, not batch compute).
+    `deadline is None` means demand-only: the ticket waits for an explicit
+    `flush()` or a full bucket.
+    """
 
-    def __init__(self, rows: int):
+    __slots__ = ("rows", "submitted_at", "deadline",
+                 "_result", "_error", "_done", "_event")
+
+    def __init__(self, rows: int, *, submitted_at: Optional[float] = None,
+                 deadline: Optional[float] = None):
         self.rows = rows
+        self.submitted_at = submitted_at
+        self.deadline = deadline
         self._result = None
         self._error: Optional[BaseException] = None
         self._done = False
+        self._event = threading.Event()
 
     def _resolve(self, value) -> None:
         self._result, self._done = value, True
+        self._event.set()
 
     def _fail(self, err: BaseException) -> None:
         self._error, self._done = err, True
+        self._event.set()
 
     @property
     def done(self) -> bool:
         return self._done
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block (REAL time, seconds) until resolved; True if it is.  For
+        cross-thread handoff from a scheduler loop — deterministic tests
+        on a VirtualClock never need a timeout: `advance()` triggers the
+        flush that sets the event."""
+        return self._event.wait(timeout)
 
     def result(self):
         if not self._done:
@@ -217,8 +240,10 @@ class MicroBatcher:
         with self._lock:
             return sum(p.ticket.rows for p in self._q)
 
-    def submit(self, key: Hashable, payload: Any, rows: int) -> Ticket:
-        t = Ticket(rows)
+    def submit(self, key: Hashable, payload: Any, rows: int, *,
+               submitted_at: Optional[float] = None,
+               deadline: Optional[float] = None) -> Ticket:
+        t = Ticket(rows, submitted_at=submitted_at, deadline=deadline)
         with self._lock:
             depth = sum(p.ticket.rows for p in self._q)
             if depth + rows > self.max_queue:
@@ -230,15 +255,39 @@ class MicroBatcher:
             self.peak_depth = max(self.peak_depth, depth + rows)
         return t
 
-    def drain(self) -> List[Tuple[Hashable, List[Tuple[Any, Ticket]]]]:
+    def drain(self, keys: Optional[Sequence[Hashable]] = None,
+              ) -> List[Tuple[Hashable, List[Tuple[Any, Ticket]]]]:
+        """Pop pending work as `(key, [(payload, ticket), ...])` groups in
+        FIFO order.  With `keys`, only those groups drain — everything else
+        stays queued (how the deadline scheduler flushes just the buckets
+        that are due)."""
         with self._lock:
-            q, self._q = self._q, []
+            if keys is None:
+                q, self._q = self._q, []
+            else:
+                ks = set(keys)
+                q = [p for p in self._q if p.key in ks]
+                self._q = [p for p in self._q if p.key not in ks]
             self.served += len(q)
         groups: "collections.OrderedDict[Hashable, List[Tuple[Any, Ticket]]]" = \
             collections.OrderedDict()
         for p in q:
             groups.setdefault(p.key, []).append((p.payload, p.ticket))
         return list(groups.items())
+
+    def pending_by_key(self) -> Dict[Hashable, Tuple[int, Optional[float]]]:
+        """Snapshot `{key: (queued_rows, earliest_deadline)}` for the
+        scheduler's due-check; `earliest_deadline` is None when no queued
+        ticket under that key carries one."""
+        with self._lock:
+            out: Dict[Hashable, Tuple[int, Optional[float]]] = {}
+            for p in self._q:
+                rows, dl = out.get(p.key, (0, None))
+                d = p.ticket.deadline
+                if d is not None:
+                    dl = d if dl is None else min(dl, d)
+                out[p.key] = (rows + p.ticket.rows, dl)
+            return out
 
     def stats(self) -> Dict[str, int]:
         return {"queue_depth": self.queue_depth(), "max_queue": self.max_queue,

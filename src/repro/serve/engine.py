@@ -37,15 +37,20 @@ Typical use:
 
 from __future__ import annotations
 
-from typing import Any, Dict, Hashable, Optional, Sequence, Tuple
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Hashable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.serve import dr_serve
-from repro.serve.batching import BoundedCompileCache, BucketPolicy, MicroBatcher
+from repro.serve import dr_serve, serve_step
+from repro.serve.batching import (BoundedCompileCache, BucketPolicy,
+                                  MicroBatcher, Ticket)
+from repro.serve.clock import Clock, MonotonicClock
 from repro.serve.registry import ModelRegistry, Snapshot
+from repro.serve.slo import SLOTracker
 
 PyTree = Any
 
@@ -58,6 +63,23 @@ def _pad_rows(x: jax.Array, bucket: int) -> jax.Array:
         [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
 
 
+@dataclasses.dataclass(frozen=True)
+class _StepKey:
+    """Queue key for non-DR work (LM prefill/decode steps) — wrapping the
+    caller's tag keeps step groups disjoint from DR model names."""
+    tag: Hashable
+    kind: str
+
+
+@dataclasses.dataclass
+class _StepWork:
+    """Queued callable: run at flush, its return value resolves the ticket.
+    Steps are admitted (ordering, backpressure, deadlines, SLO accounting)
+    but not coalesced — an LM step is already a batch."""
+    fn: Callable[..., Any]
+    args: Tuple[Any, ...]
+
+
 class DRService:
     """Online serving engine: registry + micro-batching + train-while-serve."""
 
@@ -65,20 +87,25 @@ class DRService:
                  buckets: BucketPolicy = BucketPolicy(),
                  compile_cache_size: int = 32,
                  max_queue: int = 4096,
-                 update_fraction: float = 1.0):
+                 update_fraction: float = 1.0,
+                 clock: Optional[Clock] = None):
         if not 0.0 <= update_fraction <= 1.0:
             raise ValueError("update_fraction must be in [0, 1]")
         self.mesh = mesh
         self.buckets = buckets
+        self.clock: Clock = clock if clock is not None else MonotonicClock()
         self.registry = ModelRegistry()
         self.cache = BoundedCompileCache(compile_cache_size)
         self.batcher = MicroBatcher(max_queue=max_queue)
+        self.slo = SLOTracker()
         self.update_fraction = update_fraction
         # train-while-serve bookkeeping (per model name)
         self._staged: Dict[str, PyTree] = {}
         self._accum: Dict[str, float] = {}
         self._updates: Dict[str, int] = {}
-        # serving metrics
+        # serving metrics — counters are bumped from caller threads AND a
+        # DeadlineScheduler loop, so mutations hold this lock
+        self._metrics_lock = threading.Lock()
         self.served_rows = 0
         self.padded_rows = 0
         self.batches_run = 0
@@ -118,35 +145,125 @@ class DRService:
         return self._serve_rows(snap, x)
 
     # ---- micro-batched serving ---------------------------------------------
-    def submit(self, name: str, x: jax.Array):
+    def submit(self, name: str, x: jax.Array, *,
+               max_delay_ms: Optional[float] = None) -> Ticket:
         """Enqueue a ragged request; returns a Ticket resolved by `flush`.
-        Raises `batching.QueueFull` past max_queue rows (backpressure)."""
+        Raises `batching.QueueFull` past max_queue rows (backpressure).
+        `max_delay_ms` sets the ticket's deadline relative to now — a
+        `DeadlineScheduler` wrapping this service flushes the bucket when
+        it expires; without one it only bounds the SLO miss accounting."""
         snap = self.registry.get(name)          # fail fast on unknown names
         self._check_request(snap, x)
-        return self.batcher.submit(name, x, int(x.shape[0]))
+        now = self.clock.now()
+        deadline = None if max_delay_ms is None else now + max_delay_ms
+        return self.batcher.submit(name, x, int(x.shape[0]),
+                                   submitted_at=now, deadline=deadline)
 
-    def flush(self) -> int:
+    def submit_step(self, tag: Hashable, kind: str,
+                    fn: Callable[..., Any], *args: Any,
+                    rows: int = 1,
+                    max_delay_ms: Optional[float] = None) -> Ticket:
+        """Admit a non-DR step (an already-batched callable, e.g. an LM
+        prefill or decode) through the SAME queue as DR traffic: it shares
+        backpressure, FIFO ordering, deadline scheduling, and SLO
+        accounting (under bucket label `kind`).  The ticket resolves with
+        `fn(*args)` at flush time."""
+        now = self.clock.now()
+        deadline = None if max_delay_ms is None else now + max_delay_ms
+        return self.batcher.submit(_StepKey(tag, kind), _StepWork(fn, args),
+                                   int(rows), submitted_at=now,
+                                   deadline=deadline)
+
+    def flush(self, keys: Optional[Sequence[Hashable]] = None) -> int:
         """Coalesce the queue into bucketed batches, run them, resolve every
-        ticket with its own rows.  Returns the number of device batches."""
-        n0 = self.batches_run
-        for name, items in self.batcher.drain():
+        ticket with its own rows.  With `keys`, only those groups flush
+        (the deadline scheduler's partial flush).  Returns the number of
+        device batches THIS call ran (counted locally — a concurrent
+        caller's batches never leak into the return value)."""
+        n_batches = 0
+        for name, items in self.batcher.drain(keys):
             tickets = [t for _, t in items]
+            t_flush = self.clock.now()
             try:
+                if isinstance(name, _StepKey):
+                    # steps are independent (never coalesced): one failing
+                    # step fails only its own ticket, the rest still run
+                    for work, t in items:
+                        try:
+                            out = work.fn(*work.args)
+                        except Exception as e:  # noqa: BLE001
+                            t._fail(e)
+                            continue
+                        with self._metrics_lock:
+                            self.batches_run += 1
+                        n_batches += 1
+                        # record BEFORE resolve: a waiter woken by the
+                        # ticket must find its sample already counted
+                        self._record_slo(str(name.tag), name.kind, t,
+                                         t_flush)
+                        t._resolve(out)
+                    continue
                 snap = self.registry.get(name)
                 xcat = items[0][0] if len(items) == 1 else \
                     jnp.concatenate([p for p, _ in items], axis=0)
                 ycat = self._serve_rows(snap, xcat)
+                # _serve_rows consumes max_bucket rows per device batch
+                n_batches += -(-xcat.shape[0] // self.buckets.max_bucket)
                 off = 0
                 for t in tickets:
                     sl = ycat[:, off:off + t.rows] if snap.ensemble \
                         else ycat[off:off + t.rows]
-                    t._resolve(sl)
                     off += t.rows
+                    self._record_slo(name, self.buckets.bucket_for(t.rows),
+                                     t, t_flush)
+                    t._resolve(sl)
             except Exception as e:          # noqa: BLE001 — fail the tickets
                 for t in tickets:
                     if not t.done:
                         t._fail(e)
-        return self.batches_run - n0
+        return n_batches
+
+    # ---- LM steps through the same queue ------------------------------------
+    # The *_step builders are the single source of truth for how an LM step
+    # is constructed (cache key, rows derivation, donation contract); both
+    # the direct lm_* methods and the DeadlineScheduler's LM helpers call
+    # them, so the two admission paths can't drift apart.
+    def prefill_step(self, cfg: Any, mesh: Mesh, params: PyTree,
+                     batch: PyTree, cache_size: int,
+                     ) -> Tuple[Callable[..., Any], int]:
+        """(jitted prefill, batch rows) — the jit comes from THIS service's
+        bounded compile cache, shared with the DR bucket programs."""
+        fn = serve_step.make_prefill(cfg, mesh, params, batch, cache_size,
+                                     cache=self.cache)
+        rows = jax.tree.leaves(batch)[0].shape[0]
+        return fn, int(rows)
+
+    def decode_step(self, cfg: Any, mesh: Mesh, params: PyTree,
+                    token: jax.Array, kv_cache: PyTree,
+                    ) -> Tuple[Callable[..., Any], int]:
+        """(jitted decode, batch rows); the kv cache is donated — don't
+        reuse the argument after the step runs."""
+        fn = serve_step.make_decode(cfg, mesh, params, kv_cache,
+                                    cache=self.cache)
+        return fn, int(token.shape[0])
+
+    def lm_prefill(self, cfg: Any, mesh: Mesh, params: PyTree, batch: PyTree,
+                   cache_size: int, *, tag: Hashable = "lm",
+                   max_delay_ms: Optional[float] = None) -> Ticket:
+        """Admit one LM prefill through the queue; resolves with
+        `(logits, kv_cache)`."""
+        fn, rows = self.prefill_step(cfg, mesh, params, batch, cache_size)
+        return self.submit_step(tag, "prefill", fn, params, batch,
+                                rows=rows, max_delay_ms=max_delay_ms)
+
+    def lm_decode(self, cfg: Any, mesh: Mesh, params: PyTree, token: jax.Array,
+                  kv_cache: PyTree, *, tag: Hashable = "lm",
+                  max_delay_ms: Optional[float] = None) -> Ticket:
+        """Admit one LM decode step through the queue (same contract as
+        `lm_prefill`)."""
+        fn, rows = self.decode_step(cfg, mesh, params, token, kv_cache)
+        return self.submit_step(tag, "decode", fn, params, token, kv_cache,
+                                rows=rows, max_delay_ms=max_delay_ms)
 
     # ---- train-while-serve -------------------------------------------------
     def serve_and_update(self, name: str, x: jax.Array) -> jax.Array:
@@ -176,8 +293,9 @@ class DRService:
         y, new_staged = fused(snap.state, staged, x)
         self._staged[name] = new_staged
         self._updates[name] = self._updates.get(name, 0) + 1
-        self.served_rows += int(x.shape[0])
-        self.batches_run += 1
+        with self._metrics_lock:
+            self.served_rows += int(x.shape[0])
+            self.batches_run += 1
         return y
 
     # ---- warmup / metrics --------------------------------------------------
@@ -196,6 +314,7 @@ class DRService:
         return self.cache.misses - n0
 
     def metrics(self) -> Dict[str, Any]:
+        met, missed = self.slo.deadline_counts()
         return {
             "served_rows": self.served_rows,
             "padded_rows": self.padded_rows,
@@ -204,9 +323,31 @@ class DRService:
             "staged": sorted(self._staged),
             "compile_cache": self.cache.stats(),
             "queue": self.batcher.stats(),
+            "slo": self.slo.report(),
+            "deadline_met": met,
+            "deadline_missed": missed,
         }
 
     # ---- internals ---------------------------------------------------------
+    def _record_slo(self, name: str, bucket: Hashable, t: Ticket,
+                    t_flush: float) -> None:
+        # `bucket` is the ticket's NOMINAL size class (bucket_for(rows)) —
+        # a coalesced flush may physically run a larger batch, but keeping
+        # attribution per-request gives each size class one stable cell.
+        # `deadline_ok` is judged on FLUSH START, not post-compute
+        # resolution: max_delay_ms bounds the batching window (how long the
+        # queue may hold a request), so a deadline-triggered flush that
+        # starts on time IS met — judging on resolution would brand every
+        # deadline-expiry flush a miss by construction.
+        if t.submitted_at is None:
+            return
+        now = self.clock.now()
+        self.slo.record(
+            name, bucket,
+            queue_delay_ms=max(0.0, t_flush - t.submitted_at),
+            e2e_ms=max(0.0, now - t.submitted_at),
+            deadline_ok=None if t.deadline is None else t_flush <= t.deadline)
+
     def _check_request(self, snap: Snapshot, x: jax.Array) -> None:
         if x.ndim != 2 or x.shape[-1] != snap.model.in_dim:
             raise ValueError(
@@ -242,9 +383,10 @@ class DRService:
             y = self._transform_fn(snap, bucket, x.dtype)(
                 snap.state, _pad_rows(chunk, bucket))
             outs.append(y[:, :rows] if snap.ensemble else y[:rows])
-            self.padded_rows += bucket - rows
-            self.served_rows += rows
-            self.batches_run += 1
+            with self._metrics_lock:
+                self.padded_rows += bucket - rows
+                self.served_rows += rows
+                self.batches_run += 1
             i += rows
         if len(outs) == 1:
             return outs[0]

@@ -41,10 +41,13 @@ def _tree_sig(tree: PyTree):
 
 
 def make_prefill(cfg: ArchConfig, mesh: Mesh, params_like: PyTree,
-                 batch_like: PyTree, cache_size: int):
+                 batch_like: PyTree, cache_size: int, *,
+                 cache: BoundedCompileCache = None):
+    """`cache=None` uses the module-level LRU; a `DRService` passes its own
+    so LM steps and DR bucket programs share one bounded cache."""
     key = ("prefill", config_hash(cfg), mesh, _tree_sig(params_like),
            _tree_sig(batch_like), cache_size)
-    return _CACHE.get_or_build(
+    return (cache if cache is not None else _CACHE).get_or_build(
         key, lambda: _build_prefill(cfg, mesh, params_like, batch_like,
                                     cache_size))
 
@@ -68,10 +71,11 @@ def _build_prefill(cfg: ArchConfig, mesh: Mesh, params_like: PyTree,
     )
 
 
-def make_decode(cfg: ArchConfig, mesh: Mesh, params_like: PyTree, cache_like: PyTree):
+def make_decode(cfg: ArchConfig, mesh: Mesh, params_like: PyTree, cache_like: PyTree,
+                *, cache: BoundedCompileCache = None):
     key = ("decode", config_hash(cfg), mesh, _tree_sig(params_like),
            _tree_sig(cache_like))
-    return _CACHE.get_or_build(
+    return (cache if cache is not None else _CACHE).get_or_build(
         key, lambda: _build_decode(cfg, mesh, params_like, cache_like))
 
 

@@ -1,0 +1,101 @@
+"""Deterministic serving test harness — virtual time, zero `time.sleep`.
+
+`ServingHarness` wires a `VirtualClock` into a `DRService` and wraps it
+in a `DeadlineScheduler`, exposing exactly two ways to make things
+happen:
+
+  * `advance(ms)` — move virtual time; in the default loopless mode the
+    harness then pumps `scheduler.poll()` synchronously, so every flush
+    the advance makes due has ALREADY happened when `advance` returns.
+    Deadline expiry, SLO histograms, and flush ordering are therefore
+    plain single-threaded assertions.
+  * `threaded=True` — run the real background event loop against the
+    same virtual clock: `advance()` wakes the parked loop, and tests
+    rendezvous on `Ticket.wait()` (an event wait, not a sleep).  This is
+    the mode for shutdown/drain and promote-rollback race tests.
+
+Tests in this repo never call `time.sleep`; if you need time to pass,
+advance the clock.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Hashable, Optional
+
+import jax
+
+from repro.dr import DRModel, EASIStage, RPStage
+from repro.serve import BucketPolicy, DRService, DeadlineScheduler, VirtualClock
+
+
+def small_model(m: int = 32, p: int = 16, n: int = 8, block: int = 4) -> DRModel:
+    """The standard tiny RP→EASI cascade the serving tests use."""
+    return DRModel(stages=(RPStage(m, p), EASIStage.rotation(p, n, mu=1e-3)),
+                   block_size=block)
+
+
+class ServingHarness:
+    """VirtualClock + DRService + DeadlineScheduler in one object."""
+
+    def __init__(self, model: Optional[DRModel] = None, *,
+                 name: str = "m", seed: int = 0,
+                 buckets: Optional[BucketPolicy] = None,
+                 default_max_delay_ms: float = 10.0,
+                 flush_rows: Optional[int] = None,
+                 wake_lead_ms: float = 0.0,
+                 threaded: bool = False,
+                 **service_kw: Any):
+        self.clock = VirtualClock()
+        self.model = model if model is not None else small_model()
+        self.name = name
+        self.service = DRService(
+            buckets=buckets if buckets is not None
+            else BucketPolicy(min_bucket=4, max_bucket=32),
+            clock=self.clock, **service_kw)
+        self.state = self.model.init(jax.random.PRNGKey(seed))
+        self.service.register(name, self.model, self.state)
+        self.threaded = threaded
+        self.scheduler = DeadlineScheduler(
+            self.service, default_max_delay_ms=default_max_delay_ms,
+            flush_rows=flush_rows, wake_lead_ms=wake_lead_ms, start=threaded)
+
+    # ---- driving ----------------------------------------------------------
+    def submit(self, x, *, name: Optional[str] = None,
+               max_delay_ms: Optional[float] = None):
+        return self.scheduler.submit(name if name is not None else self.name,
+                                     x, max_delay_ms=max_delay_ms)
+
+    def submit_step(self, tag: Hashable, kind: str, fn, *args,
+                    rows: int = 1, max_delay_ms: Optional[float] = None):
+        return self.scheduler.submit_step(tag, kind, fn, *args, rows=rows,
+                                          max_delay_ms=max_delay_ms)
+
+    def advance(self, ms: float) -> int:
+        """Move virtual time by `ms`.  Loopless mode: pump the scheduler and
+        return the number of device batches flushed.  Threaded mode: the
+        wakeup is the loop's — returns 0 immediately (rendezvous on
+        `Ticket.wait()`)."""
+        self.clock.advance(ms)
+        if self.threaded:
+            return 0
+        return self.scheduler.poll()
+
+    def poll(self) -> int:
+        return self.scheduler.poll()
+
+    def now(self) -> float:
+        return self.clock.now()
+
+    def expect(self, x):
+        """Reference output for a request against the registered live state."""
+        return self.model.transform(self.state, x)
+
+    # ---- teardown ---------------------------------------------------------
+    def shutdown(self, **kw: Any) -> None:
+        self.scheduler.shutdown(**kw)
+
+    def __enter__(self) -> "ServingHarness":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.shutdown()

@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.data import synthetic
 from repro.models import blocks
+from repro.serve.batching import BoundedCompileCache, BucketPolicy, MicroBatcher
 from repro.train import optimizer as opt_mod
 
 
@@ -89,3 +90,64 @@ class TestChunkedCE:
         nll = -jnp.take_along_axis(logp, jnp.maximum(tg_masked, 0)[..., None], -1)[..., 0]
         want = jnp.sum(nll * (tg_masked >= 0)) / jnp.sum(tg_masked >= 0)
         np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+class TestBatchingInvariants:
+    """Serving-layer invariants the deadline scheduler builds on."""
+
+    @settings(max_examples=50, deadline=None)
+    @given(data=st.data(), log_min=st.integers(0, 6), log_span=st.integers(0, 6))
+    def test_bucket_for_monotone_and_never_undersized(self, data, log_min, log_span):
+        p = BucketPolicy(min_bucket=2 ** log_min,
+                         max_bucket=2 ** (log_min + log_span))
+        ns = sorted(data.draw(st.lists(
+            st.integers(1, p.max_bucket), min_size=1, max_size=20)))
+        prev = 0
+        for n in ns:                        # ns sorted → monotone check
+            b = p.bucket_for(n)
+            assert b >= n                   # never smaller than the request
+            assert b >= prev                # monotone in n
+            assert b in p.buckets()         # always a compiled shape
+            prev = b
+
+    @settings(max_examples=50, deadline=None)
+    @given(ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.sampled_from("abc"),
+                      st.integers(1, 5)),
+            st.tuples(st.just("drain"), st.sampled_from([None, "a", "b", "c"]),
+                      st.just(0)),
+        ), min_size=1, max_size=40))
+    def test_microbatcher_lossless_no_dupes_fifo(self, ops):
+        """A randomized submit/drain schedule (full and selective drains)
+        loses no row, duplicates none, and keeps FIFO order per key."""
+        mb = MicroBatcher(max_queue=10 ** 6)
+        sent = {k: [] for k in "abc"}
+        got = {k: [] for k in "abc"}
+        seq = 0
+        for op, arg, rows in ops:
+            if op == "submit":
+                payload = (arg, seq, rows)
+                mb.submit(arg, payload, rows)
+                sent[arg].append(payload)
+                seq += 1
+            else:
+                for key, items in mb.drain(None if arg is None else [arg]):
+                    got[key].extend(p for p, _ in items)
+        for key, items in mb.drain():
+            got[key].extend(p for p, _ in items)
+        assert got == sent                  # lossless + no dupes + FIFO
+        assert mb.queue_depth() == 0
+        assert mb.submitted == mb.served == seq
+
+    @settings(max_examples=50, deadline=None)
+    @given(keys=st.lists(st.integers(0, 12), min_size=1, max_size=60),
+           maxsize=st.integers(1, 8))
+    def test_compile_cache_bounded_and_counters_consistent(self, keys, maxsize):
+        c = BoundedCompileCache(maxsize=maxsize)
+        for i, k in enumerate(keys):
+            assert c.get_or_build(k, lambda k=k: ("built", k)) == ("built", k)
+            assert len(c) <= maxsize        # never exceeds the bound
+            assert c.hits + c.misses == i + 1
+        assert c.misses >= len(set(keys[-maxsize:]))  # live keys were built
+        assert c.misses - c.evictions == len(c)
