@@ -21,6 +21,14 @@ each bucket policy:
 A train-while-serve row exercises the full register → serve_and_update →
 promote → transform round trip on the same stream.
 
+A replicated-promote row runs a 3-host `LocalBus` fleet (one leader +
+two follower `ReplicatedRegistry`s, each behind its own `DRService`) and
+measures the two-phase flip: `flip_ms` is time-to-consistency (promote
+call → every host uniformly on the new version, i.e. quorum-ack on the
+synchronous bus), while reader threads hammering the follower engines
+count how many requests were answered against the stale version during
+the flip window.
+
 Run: PYTHONPATH=src python benchmarks/serve_latency.py [--smoke] [--full]
 (or through `python -m benchmarks.run --only serve_latency`).
 """
@@ -28,6 +36,7 @@ Run: PYTHONPATH=src python benchmarks/serve_latency.py [--smoke] [--full]
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -35,7 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dr import DRModel, EASIStage, RPStage
-from repro.serve import BucketPolicy, DRService, DeadlineScheduler
+from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, LocalBus,
+                         ReplicatedRegistry)
 from repro.serve.batching import EXACT
 
 
@@ -141,6 +151,54 @@ def run(fast: bool = True):
                  wall / max(1, len(blocks)) * 1e6,
                  f"blocks={len(blocks)};promoted_version={v};"
                  f"updates={svc.metrics()['updates_applied']['dr']}"))
+
+    # replicated promote: 3-host fleet, two-phase flip under live traffic
+    bus = LocalBus()
+    leader = ReplicatedRegistry(bus.attach("h0"), role="leader")
+    regs = [leader] + [ReplicatedRegistry(bus.attach(f"h{i}"),
+                                          role="follower", leader="h0")
+                       for i in (1, 2)]
+    svcs = [DRService(registry=r,
+                      buckets=BucketPolicy(min_bucket=4, max_bucket=64))
+            for r in regs]
+    leader.register("dr", model, state)
+    retrained = model.fit(state, stream[:256], epochs=1)
+    v = leader.push("dr", retrained)                 # replicated, NOT live
+    x_probe = reqs[0]
+    for s in svcs:                                   # warm every host's jit
+        jax.block_until_ready(s.transform("dr", x_probe))
+    lock = threading.Lock()
+    samples = []                                     # (snapshot time, version)
+    stop = threading.Event()
+
+    def reader(s):
+        while not stop.is_set():
+            t_read = time.perf_counter()
+            served_v = s.registry.get("dr").version  # epoch this request sees
+            jax.block_until_ready(s.transform("dr", x_probe))
+            with lock:
+                samples.append((t_read, served_v))
+
+    readers = [threading.Thread(target=reader, args=(s,)) for s in svcs[1:]]
+    for th in readers:
+        th.start()
+    t0 = time.perf_counter()
+    leader.promote("dr", v)                          # two-phase fleet flip
+    t1 = time.perf_counter()
+    flip_ms = (t1 - t0) * 1e3
+    finals = [r.get("dr").version for r in regs]
+    stop.set()
+    for th in readers:
+        th.join(30.0)
+    # only requests whose SNAPSHOT landed inside [promote start, quorum-ack]
+    # count toward the flip window — anything earlier legitimately serves old
+    window = [v_ for t, v_ in samples if t0 <= t <= t1]
+    stale = sum(1 for v_ in window if v_ == 0)
+    rows.append(("serve_latency/replicated_promote", flip_ms * 1e3,
+                 f"hosts=3;flip_ms={flip_ms:.2f};"
+                 f"stale_served_during_flip={stale};"
+                 f"reads_during_flip_window={len(window)};"
+                 f"final_versions={'/'.join(map(str, finals))}"))
     return rows
 
 
@@ -172,6 +230,9 @@ def main():
                      .split("deadline_miss_rate=")[1].split(";")[0])
         assert 0.0 <= miss < 1.0, miss
         assert "promoted_version=1" in by["serve_latency/train_while_serve"]
+        # the fleet flip must end uniformly on the new version — a mixed
+        # final epoch means the two-phase promote tore the deployment
+        assert "final_versions=1/1/1" in by["serve_latency/replicated_promote"]
         print("SERVE_LATENCY_SMOKE_OK")
 
 

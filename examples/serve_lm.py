@@ -15,6 +15,12 @@ Two request paths, ONE admission queue, one deadline scheduler:
     cache as the DR bucket programs — one scheduler, one LRU, shared
     backpressure and SLO accounting for both workloads.
 
+The DR model lives in a replicated 3-host registry (one leader + two
+follower `ReplicatedRegistry`s on a `LocalBus`): the serving engine runs
+on the leader, and the train-while-serve promote is a two-phase
+fleet-wide flip — after it returns, every host in the fleet answers with
+the retrained state, not just the host that retrained.
+
 Run: PYTHONPATH=src python examples/serve_lm.py [--tokens 16] [--batch 4]
 """
 
@@ -29,7 +35,8 @@ from repro.configs import registry
 from repro.dr import DRModel, EASIStage, RPStage
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import api
-from repro.serve import BucketPolicy, DRService, DeadlineScheduler
+from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, LocalBus,
+                         ReplicatedRegistry)
 
 
 def main():
@@ -48,9 +55,16 @@ def main():
     cache_size = args.prompt_len + args.tokens
 
     # ---- one engine, one deadline scheduler for BOTH workloads ------------
+    # the DR registry is REPLICATED: this engine serves on the leader, two
+    # follower hosts shadow every register/push/promote over the bus
     dr = DRModel(stages=(RPStage(args.frame_dim, 16),
                          EASIStage.rotation(16, 8, mu=5e-4)), block_size=8)
-    svc = DRService(buckets=BucketPolicy(min_bucket=8, max_bucket=64))
+    bus = LocalBus()
+    leader = ReplicatedRegistry(bus.attach("h0"), role="leader")
+    followers = [ReplicatedRegistry(bus.attach(f"h{i}"), role="follower",
+                                    leader="h0") for i in (1, 2)]
+    svc = DRService(registry=leader,
+                    buckets=BucketPolicy(min_bucket=8, max_bucket=64))
     svc.register("frames", dr, dr.init(jax.random.PRNGKey(2)))
     # wake_lead_ms=1: wake the loop ~1 ms before each deadline so flushes
     # start inside their budget despite real-clock wakeup latency
@@ -71,7 +85,10 @@ def main():
     blocks = stream[: (stream.shape[0] // 8) * 8].reshape(-1, 8, args.frame_dim)
     for blk in blocks:
         svc.serve_and_update("frames", blk)
-    live_version = svc.promote("frames")
+    live_version = svc.promote("frames")    # two-phase FLEET-wide flip
+    fleet_live = {h: s["live"].get("frames")
+                  for h, s in leader.fleet_status().items()}
+    assert set(fleet_live.values()) == {live_version}, fleet_live
 
     # LM path: prefill + greedy decode admitted through the SAME queue,
     # jitted into the SAME bounded compile cache as the DR buckets.
@@ -113,6 +130,8 @@ def main():
           f"({met['padded_rows']} padded rows), "
           f"train-while-serve promoted v{live_version} "
           f"after {met['updates_applied']['frames']} updates")
+    print(f"fleet: live version per host {fleet_live} "
+          f"(two-phase promote — no host serves a stale epoch)")
     print(f"deadlines: {met['deadline_met']} met / {met['deadline_missed']} "
           f"missed")
     for name, cells in met["slo"].items():

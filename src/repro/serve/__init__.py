@@ -5,27 +5,38 @@ registry + dynamic micro-batching + train-while-serve + per-bucket SLO
 accounting.  `repro.serve.scheduler.DeadlineScheduler` wraps the engine's
 admission queue in a deadline-driven event loop (flush on fill OR oldest
 deadline, all time through the injectable `repro.serve.clock.Clock`).
-`dr_transform` and the prefill/decode factories remain as thin adapters
-over the same bounded compile cache for one-shot callers.
+`repro.serve.replication.ReplicatedRegistry` replicates a fleet of
+registries (op log + two-phase atomic promote) over a
+`repro.serve.transport.Transport` (`LocalBus` in tests, `TCPTransport`
+for multi-process fleets) and plugs into the engine via
+`DRService(registry=...)`.  `dr_transform` and the prefill/decode
+factories remain as thin adapters over the same bounded compile cache
+for one-shot callers.
 """
 
 from repro.serve import (batching, clock, dr_serve, engine, registry,
-                         scheduler, serve_step, slo)
+                         replication, scheduler, serve_step, slo, transport)
 from repro.serve.batching import (BoundedCompileCache, BucketPolicy,
                                   MicroBatcher, QueueFull, Ticket)
 from repro.serve.clock import Clock, MonotonicClock, VirtualClock
 from repro.serve.dr_serve import dr_transform, make_dr_transform
 from repro.serve.engine import DRService
 from repro.serve.registry import ModelRegistry
+from repro.serve.replication import (Op, ReplicatedRegistry, ReplicationError,
+                                     state_hash)
 from repro.serve.scheduler import DeadlineScheduler, SchedulerClosed
 from repro.serve.slo import LatencyStats, SLOTracker
+from repro.serve.transport import (LocalBus, TCPTransport, Transport,
+                                   TransportError)
 
 __all__ = [
     "engine", "registry", "batching", "serve_step", "dr_serve",
-    "scheduler", "clock", "slo",
+    "scheduler", "clock", "slo", "replication", "transport",
     "DRService", "ModelRegistry", "DeadlineScheduler", "SchedulerClosed",
     "BucketPolicy", "BoundedCompileCache", "MicroBatcher", "QueueFull",
     "Ticket", "Clock", "MonotonicClock", "VirtualClock",
     "LatencyStats", "SLOTracker",
+    "ReplicatedRegistry", "ReplicationError", "Op", "state_hash",
+    "LocalBus", "TCPTransport", "Transport", "TransportError",
     "dr_transform", "make_dr_transform",
 ]

@@ -108,9 +108,11 @@ class BoundedCompileCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.races = 0      # lost build races: real compile work, discarded
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def __contains__(self, key: Hashable) -> bool:
         with self._lock:
@@ -132,7 +134,12 @@ class BoundedCompileCache:
                     self._d.popitem(last=False)
                     self.evictions += 1
             else:
-                self.hits += 1
+                # another thread built the same key first: our compile work
+                # was real, so this is a MISS (misses == programs actually
+                # built), tracked as a race — booking it a hit would make
+                # compile-count assertions blind to duplicated trace work
+                self.misses += 1
+                self.races += 1
             self._d.move_to_end(key)
             return self._d[key]
 
@@ -146,9 +153,10 @@ class BoundedCompileCache:
         return self.misses
 
     def stats(self) -> Dict[str, int]:
-        return {"size": len(self._d), "maxsize": self.maxsize,
-                "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions}
+        with self._lock:
+            return {"size": len(self._d), "maxsize": self.maxsize,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions, "races": self.races}
 
 
 # ---------------------------------------------------------------------------
@@ -243,6 +251,14 @@ class MicroBatcher:
     def submit(self, key: Hashable, payload: Any, rows: int, *,
                submitted_at: Optional[float] = None,
                deadline: Optional[float] = None) -> Ticket:
+        if rows > self.max_queue:
+            # NOT QueueFull: even an empty queue can never admit this
+            # request, so retrying-on-backoff would spin forever — it is a
+            # caller bug, distinct from transient backpressure
+            raise ValueError(
+                f"request of {rows} rows exceeds max_queue={self.max_queue} "
+                f"and can never be admitted — chunk the request (QueueFull "
+                f"signals transient backpressure; this does not pass)")
         t = Ticket(rows, submitted_at=submitted_at, deadline=deadline)
         with self._lock:
             depth = sum(p.ticket.rows for p in self._q)

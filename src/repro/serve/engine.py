@@ -88,27 +88,49 @@ class DRService:
                  compile_cache_size: int = 32,
                  max_queue: int = 4096,
                  update_fraction: float = 1.0,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None,
+                 registry: Optional[Any] = None):
         if not 0.0 <= update_fraction <= 1.0:
             raise ValueError("update_fraction must be in [0, 1]")
         self.mesh = mesh
         self.buckets = buckets
         self.clock: Clock = clock if clock is not None else MonotonicClock()
-        self.registry = ModelRegistry()
+        # `registry` hook: anything with the ModelRegistry surface — e.g. a
+        # `repro.serve.replication.ReplicatedRegistry` so this service's
+        # register/push/promote go fleet-wide (get() semantics unchanged)
+        self.registry = registry if registry is not None else ModelRegistry()
         self.cache = BoundedCompileCache(compile_cache_size)
         self.batcher = MicroBatcher(max_queue=max_queue)
         self.slo = SLOTracker()
         self.update_fraction = update_fraction
-        # train-while-serve bookkeeping (per model name)
+        # train-while-serve bookkeeping (per model name).  All three dicts
+        # are mutated from caller threads AND read by promote(), so every
+        # access goes through the per-name lock (`_tws_lock`): promote's
+        # pop → push → promote must be atomic w.r.t. a concurrent
+        # serve_and_update, or an update chained onto the pre-promote base
+        # lands between the pop and the push and is silently orphaned.
         self._staged: Dict[str, PyTree] = {}
         self._accum: Dict[str, float] = {}
         self._updates: Dict[str, int] = {}
+        # (staged object, version) of a push whose promote failed — a retry
+        # with the SAME chain re-promotes that version instead of pushing a
+        # duplicate (a replicated push re-ships the full state to the fleet)
+        self._staged_pushed: Dict[str, Tuple[PyTree, int]] = {}
+        self._tws_guard = threading.Lock()          # guards the lock table
+        self._tws_locks: Dict[str, threading.Lock] = {}
         # serving metrics — counters are bumped from caller threads AND a
-        # DeadlineScheduler loop, so mutations hold this lock
+        # DeadlineScheduler loop, so mutations AND reads hold this lock
         self._metrics_lock = threading.Lock()
         self.served_rows = 0
         self.padded_rows = 0
         self.batches_run = 0
+
+    def _tws_lock(self, name: str) -> threading.Lock:
+        with self._tws_guard:
+            lock = self._tws_locks.get(name)
+            if lock is None:
+                lock = self._tws_locks[name] = threading.Lock()
+            return lock
 
     # ---- registry facade ---------------------------------------------------
     def register(self, name: str, model: Any, state: PyTree, *,
@@ -119,21 +141,53 @@ class DRService:
     def promote(self, name: str, version: Optional[int] = None) -> int:
         """Make a state version live.  With no explicit `version`, promotes
         the state staged by `serve_and_update` (pushing it as a new
-        version first) — the online-retrain hot-swap."""
-        if version is None:
-            staged = self._staged.pop(name, None)
-            if staged is None:
-                raise RuntimeError(
-                    f"nothing staged for {name!r}; run serve_and_update first "
-                    f"or pass an explicit version")
-            version = self.registry.push(name, staged)
-        return self.registry.promote(name, version)
+        version first) — the online-retrain hot-swap.  The whole
+        pop → push → promote runs under the per-name train-while-serve
+        lock, so a concurrent `serve_and_update` either lands before the
+        pop (its update is in the promoted state) or after the promote
+        (it chains onto the newly-live state) — never in between."""
+        with self._tws_lock(name):
+            if version is None:
+                with self._tws_guard:
+                    staged = self._staged.pop(name, None)
+                    pushed = self._staged_pushed.pop(name, None)
+                if staged is None:
+                    raise RuntimeError(
+                        f"nothing staged for {name!r}; run serve_and_update "
+                        f"first or pass an explicit version")
+                try:
+                    if pushed is not None and pushed[0] is staged:
+                        # this exact chain was already pushed by a promote
+                        # that then failed — reuse its version, don't ship
+                        # a duplicate state to the registry (or the fleet)
+                        version = pushed[1]
+                    else:
+                        version = self.registry.push(name, staged)
+                except Exception:
+                    with self._tws_guard:
+                        self._staged[name] = staged
+                    raise
+                try:
+                    return self.registry.promote(name, version)
+                except Exception:
+                    # promote can fail after the pop+push (e.g. a replicated
+                    # registry aborting on lost quorum) — restore the staged
+                    # state so the update chain isn't orphaned, and remember
+                    # the pushed version so a retry promotes it instead of
+                    # pushing again.  We hold the per-name lock, so nothing
+                    # staged in between.
+                    with self._tws_guard:
+                        self._staged[name] = staged
+                        self._staged_pushed[name] = (staged, version)
+                    raise
+            return self.registry.promote(name, version)
 
     def rollback(self, name: str) -> int:
         return self.registry.rollback(name)
 
     def staged_state(self, name: str) -> Optional[PyTree]:
-        return self._staged.get(name)
+        with self._tws_guard:
+            return self._staged.get(name)
 
     # ---- one-shot serving --------------------------------------------------
     def transform(self, name: str, x: jax.Array) -> jax.Array:
@@ -148,7 +202,9 @@ class DRService:
     def submit(self, name: str, x: jax.Array, *,
                max_delay_ms: Optional[float] = None) -> Ticket:
         """Enqueue a ragged request; returns a Ticket resolved by `flush`.
-        Raises `batching.QueueFull` past max_queue rows (backpressure).
+        Raises `batching.QueueFull` past max_queue rows (backpressure;
+        transient — retry after a flush) and `ValueError` for requests
+        larger than max_queue outright (never admittable — chunk them).
         `max_delay_ms` sets the ticket's deadline relative to now — a
         `DeadlineScheduler` wrapping this service flushes the bucket when
         it expires; without one it only bounds the SLO miss accounting."""
@@ -204,8 +260,27 @@ class DRService:
                         t._resolve(out)
                     continue
                 snap = self.registry.get(name)
-                xcat = items[0][0] if len(items) == 1 else \
-                    jnp.concatenate([p for p, _ in items], axis=0)
+                # validate every payload against the FLUSH-TIME snapshot:
+                # `register(replace=True)` may have swapped the model since
+                # submit, and a stale-shaped request must fail alone with a
+                # clear message — not blow up the whole group inside
+                # jnp.concatenate with an opaque shape error
+                good = []
+                for payload, t in items:
+                    if payload.ndim != 2 or \
+                            payload.shape[-1] != snap.model.in_dim:
+                        t._fail(ValueError(
+                            f"request shaped {tuple(payload.shape)} no longer "
+                            f"matches {name!r} at flush time (model expects "
+                            f"(B, {snap.model.in_dim}) — it was replaced "
+                            f"after this request was submitted)"))
+                    else:
+                        good.append((payload, t))
+                if not good:
+                    continue
+                tickets = [t for _, t in good]
+                xcat = good[0][0] if len(good) == 1 else \
+                    jnp.concatenate([p for p, _ in good], axis=0)
                 ycat = self._serve_rows(snap, xcat)
                 # _serve_rows consumes max_bucket rows per device batch
                 n_batches += -(-xcat.shape[0] // self.buckets.max_bucket)
@@ -271,28 +346,38 @@ class DRService:
         `model.update` into the STAGED state (every `1/update_fraction`-th
         block on average, deterministically via an accumulator).  The
         staged state chains across calls, so a full stream followed by
-        `promote()` equals an offline `fit` with the same block order."""
-        snap = self.registry.get(name)
-        self._check_request(snap, x)
-        if snap.ensemble:
-            raise NotImplementedError(
-                "train-while-serve targets single models; ensembles are "
-                "serve-only (fit them offline via DREnsemble.fit)")
-        self._accum[name] = self._accum.get(name, 0.0) + self.update_fraction
-        if self._accum[name] < 1.0 - 1e-9:       # skip update on this block
-            return self._serve_rows(snap, x)
-        self._accum[name] -= 1.0
+        `promote()` equals an offline `fit` with the same block order.
 
-        staged = self._staged.get(name, snap.state)
-        key = ("fused", snap.chash, x.shape, str(x.dtype))
-        model = snap.model      # close over the config only, never the state
-        fused = self.cache.get_or_build(
-            key, lambda: jax.jit(
-                lambda live, st, xb: (model.transform(live, xb),
-                                      model.update(st, xb))))
-        y, new_staged = fused(snap.state, staged, x)
-        self._staged[name] = new_staged
-        self._updates[name] = self._updates.get(name, 0) + 1
+        Runs under the per-name train-while-serve lock: the snapshot read,
+        the update, and the staged write are one atomic step w.r.t. a
+        concurrent `promote()` — updates for the same name serialize (they
+        must: staged states chain), different names stream in parallel."""
+        with self._tws_lock(name):
+            snap = self.registry.get(name)
+            self._check_request(snap, x)
+            if snap.ensemble:
+                raise NotImplementedError(
+                    "train-while-serve targets single models; ensembles are "
+                    "serve-only (fit them offline via DREnsemble.fit)")
+            with self._tws_guard:
+                acc = self._accum.get(name, 0.0) + self.update_fraction
+                skip = acc < 1.0 - 1e-9
+                self._accum[name] = acc if skip else acc - 1.0
+            if skip:                            # no update on this block
+                return self._serve_rows(snap, x)
+
+            with self._tws_guard:
+                staged = self._staged.get(name, snap.state)
+            key = ("fused", snap.chash, x.shape, str(x.dtype))
+            model = snap.model  # close over the config only, never the state
+            fused = self.cache.get_or_build(
+                key, lambda: jax.jit(
+                    lambda live, st, xb: (model.transform(live, xb),
+                                          model.update(st, xb))))
+            y, new_staged = fused(snap.state, staged, x)
+            with self._tws_guard:
+                self._staged[name] = new_staged
+                self._updates[name] = self._updates.get(name, 0) + 1
         with self._metrics_lock:
             self.served_rows += int(x.shape[0])
             self.batches_run += 1
@@ -315,12 +400,22 @@ class DRService:
 
     def metrics(self) -> Dict[str, Any]:
         met, missed = self.slo.deadline_counts()
+        # counters are written under these locks from caller threads and the
+        # scheduler loop — read them the same way, or a report racing a
+        # flush returns torn (partially bumped) numbers
+        with self._metrics_lock:
+            served = self.served_rows
+            padded = self.padded_rows
+            batches = self.batches_run
+        with self._tws_guard:
+            updates = dict(self._updates)
+            staged = sorted(self._staged)
         return {
-            "served_rows": self.served_rows,
-            "padded_rows": self.padded_rows,
-            "batches_run": self.batches_run,
-            "updates_applied": dict(self._updates),
-            "staged": sorted(self._staged),
+            "served_rows": served,
+            "padded_rows": padded,
+            "batches_run": batches,
+            "updates_applied": updates,
+            "staged": staged,
             "compile_cache": self.cache.stats(),
             "queue": self.batcher.stats(),
             "slo": self.slo.report(),

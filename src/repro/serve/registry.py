@@ -15,6 +15,10 @@ error unless `replace=True` (a silently swapped architecture under a live
 name is how serving fleets eat mis-shaped traffic).  `get()` returns one
 consistent `(model, state, version)` snapshot under the lock, so a
 concurrent promote can never hand a caller a torn pair.
+
+This registry is single-host; `repro.serve.replication.ReplicatedRegistry`
+wraps one of these per host (reads delegate straight through) and
+replicates mutations fleet-wide with an atomic two-phase promote.
 """
 
 from __future__ import annotations
@@ -66,6 +70,12 @@ class ModelRegistry:
     def n_versions(self, name: str) -> int:
         with self._lock:
             return len(self._entry(name).versions)
+
+    def live_version(self, name: str) -> int:
+        """The version id `get()` would serve right now (fleet probes read
+        this to compare epochs across replicated hosts)."""
+        with self._lock:
+            return self._entry(name).live
 
     # ---- lifecycle ---------------------------------------------------------
     def register(self, name: str, model: Any, state: PyTree, *,

@@ -1,0 +1,501 @@
+"""Cross-host registry replication with atomic fleet-wide promote.
+
+A serving *fleet* must hot-swap models together: if every host promotes
+independently, a retrained state goes live on one host while its
+neighbors still answer with the old version — the torn deployment this
+module exists to prevent.  `ReplicatedRegistry` wraps one unchanged
+`ModelRegistry` per host and keeps a fleet of them convergent:
+
+  * **Op log** — every mutation (`register`/`push`/`promote`/`rollback`)
+    is an idempotent, per-name sequence-numbered `Op` record.  State
+    payloads are content-addressed by `state_hash`, so replaying an op is
+    safe (a seq already applied is skipped) and catch-up never re-ships a
+    state a host already holds.
+  * **Leader/follower** — one leader accepts mutations and replicates
+    them; followers apply ops and serve reads from their local registry
+    (`get()` keeps the exact snapshot semantics `DRService` relies on).
+    A follower that receives an op out of order pulls the gap from the
+    leader before acking (anti-entropy inline), and `sync()` performs the
+    same catch-up wholesale — how a late-joining host converges.
+  * **Two-phase promote** — `promote` first asks every reachable host to
+    confirm it *holds* the target version (phase 1, `prepare`; a host
+    missing it catches up before confirming).  Only when a configurable
+    quorum (default: majority of the fleet) has confirmed does the leader
+    append the promote op, flip its own live pointer, and broadcast the
+    flip (phase 2, `commit`).  Until phase 2, no live pointer anywhere
+    has moved, so an aborted promote (no quorum) leaves the whole fleet
+    uniformly on the old version; after `promote()` returns, every host
+    that acked is uniformly on the new one, and partitioned stragglers
+    converge through anti-entropy when they heal.
+
+Wiring into serving is one constructor hook:
+
+    bus = LocalBus()
+    leader = ReplicatedRegistry(bus.attach("h0"), role="leader")
+    f1 = ReplicatedRegistry(bus.attach("h1"), role="follower", leader="h0")
+    svc0 = DRService(registry=leader)       # mutations go fleet-wide
+    svc1 = DRService(registry=f1)           # read replica, same API
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import config_hash
+from repro.serve.registry import ModelRegistry, Snapshot
+from repro.serve.transport import Message, Transport, TransportError
+
+PyTree = Any
+
+
+class ReplicationError(RuntimeError):
+    """A fleet mutation could not reach its quorum / role contract."""
+
+
+# ---------------------------------------------------------------------------
+# content addressing
+# ---------------------------------------------------------------------------
+
+def host_state(state: PyTree) -> PyTree:
+    """Device → host copy of a state pytree (numpy leaves).  Replication
+    always ships host arrays: they pickle portably and hash stably."""
+    return jax.tree.map(lambda a: np.asarray(jax.device_get(a)), state)
+
+
+def state_hash(state: PyTree) -> str:
+    """Content address of a state pytree: keypaths, dtypes, shapes, bytes.
+    Stable across processes and across jax/numpy leaf types."""
+    h = hashlib.sha256()
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    for kp, leaf in flat:
+        a = np.ascontiguousarray(np.asarray(jax.device_get(leaf)))
+        h.update(jax.tree_util.keystr(kp).encode())
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# op log records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One idempotent, per-name sequence-numbered registry mutation.
+
+    `seq` orders ops within a name (0-based, no gaps); applying the same
+    seq twice is a no-op, so delivery may be at-least-once.  `version` is
+    the version id the op creates (`register`/`push`) or targets
+    (`promote`); `state_hash` content-addresses the payload so catch-up
+    can skip states the receiver already holds.  `model` rides along on
+    `register` ops only (configs are small; states are the heavy part).
+    """
+
+    seq: int
+    kind: str                           # register | push | promote | rollback
+    name: str
+    version: Optional[int] = None
+    state_hash: Optional[str] = None
+    chash: Optional[str] = None         # register: config identity
+    ensemble: Optional[int] = None
+    replace: bool = False
+    model: Any = None
+
+
+# ---------------------------------------------------------------------------
+# replicated registry
+# ---------------------------------------------------------------------------
+
+class ReplicatedRegistry:
+    """A `ModelRegistry` that replicates its mutations across a fleet.
+
+    Reads (`get`, `state`, `names`, ...) delegate straight to the wrapped
+    local registry — same lock, same snapshot semantics — so `DRService`
+    plugs in via its `registry=` hook with no behavior change on the
+    request path.  Mutations are leader-only: followers raise
+    `ReplicationError` (retrain on the leader; replicas serve).
+
+    `quorum` is the number of hosts (leader included) that must hold a
+    version before `promote` flips it live fleet-wide; `None` means a
+    majority of the currently-attached fleet, evaluated per call.
+    """
+
+    def __init__(self, transport: Transport, *, role: str = "follower",
+                 leader: Optional[str] = None, quorum: Optional[int] = None,
+                 sync_on_start: bool = True):
+        if role not in ("leader", "follower"):
+            raise ValueError(f"role must be leader|follower, got {role!r}")
+        if role == "follower" and leader is None:
+            raise ValueError("a follower needs its leader's host id")
+        if quorum is not None and quorum < 1:
+            raise ValueError("quorum must be >= 1")
+        self.transport = transport
+        self.role = role
+        self.leader = transport.host_id if role == "leader" else leader
+        self.quorum = quorum
+        self.local = ModelRegistry()
+        # `_mutate` serializes whole leader mutations (append + broadcast +
+        # quorum wait).  `_meta` guards the log/state-store/applied maps and
+        # is never held across transport I/O, so pull/status handlers from
+        # peers can always be answered while a broadcast is in flight —
+        # holding one lock across both is how a TCP fleet deadlocks.
+        self._mutate = threading.RLock()
+        self._meta = threading.RLock()
+        self._log: Dict[str, List[Op]] = {}
+        self._applied: Dict[str, int] = {}          # name -> last applied seq
+        self._states: Dict[str, PyTree] = {}        # content hash -> state
+        self._vhash: Dict[str, List[str]] = {}      # name -> version -> hash
+        transport.set_handler(self._handle)
+        if role == "follower" and sync_on_start:
+            try:
+                self.sync()
+            except TransportError:
+                pass                                # leader not up yet
+
+    # ---- reads: the wrapped registry, unchanged ---------------------------
+    def get(self, name: str) -> Snapshot:
+        return self.local.get(name)
+
+    def state(self, name: str, version: int) -> PyTree:
+        return self.local.state(name, version)
+
+    def names(self) -> Tuple[str, ...]:
+        return self.local.names()
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.local
+
+    def n_versions(self, name: str) -> int:
+        return self.local.n_versions(name)
+
+    # ---- fleet introspection ----------------------------------------------
+    def applied_seq(self, name: str) -> int:
+        with self._meta:
+            return self._applied.get(name, -1)
+
+    def status(self) -> Dict[str, Any]:
+        """Local view: live version + applied seq per name, held hashes."""
+        with self._meta:
+            names = dict(self._applied)
+            hashes = len(self._states)
+        return {
+            "host": self.transport.host_id,
+            "role": self.role,
+            "live": {n: self.local.live_version(n) for n in names},
+            "applied": names,
+            "hashes": hashes,
+        }
+
+    def fleet_status(self) -> Dict[str, Dict[str, Any]]:
+        """Leader helper: `status()` of every reachable host (self included);
+        unreachable peers are omitted."""
+        out = {self.transport.host_id: self.status()}
+        for p in self.transport.peers():
+            try:
+                out[p] = self.transport.send(p, {"req": "status"})
+            except TransportError:
+                pass
+        return out
+
+    # ---- mutations (leader only) ------------------------------------------
+    def register(self, name: str, model: Any, state: PyTree, *,
+                 ensemble: Optional[int] = None, replace: bool = False) -> int:
+        self._require_leader("register")
+        st = host_state(state)
+        h = state_hash(st)
+        with self._mutate:
+            with self._meta:
+                # validate against the local registry FIRST — a refused
+                # register (config-hash conflict) must not enter the log
+                self.local.register(name, model, st, ensemble=ensemble,
+                                    replace=replace)
+                op = Op(seq=self._applied.get(name, -1) + 1, kind="register",
+                        name=name, version=0, state_hash=h,
+                        chash=config_hash(model), ensemble=ensemble,
+                        replace=replace, model=model)
+                self._commit_meta(op, st)
+            self._broadcast(op, {h: st})
+            return 0
+
+    def push(self, name: str, state: PyTree) -> int:
+        """Append a state version fleet-wide (not live); returns its id."""
+        self._require_leader("push")
+        st = host_state(state)
+        h = state_hash(st)
+        with self._mutate:
+            with self._meta:
+                version = self.local.push(name, st)
+                op = Op(seq=self._applied.get(name, -1) + 1, kind="push",
+                        name=name, version=version, state_hash=h)
+                self._commit_meta(op, st)
+            self._broadcast(op, {h: st})
+            return version
+
+    def promote(self, name: str, version: Optional[int] = None) -> int:
+        """Two-phase fleet-wide flip.  Phase 1 (`prepare`): every reachable
+        host confirms it holds the target version (catching up if not);
+        without a quorum of confirmations the promote aborts and NO live
+        pointer has moved anywhere.  Phase 2 (`commit`): the promote op is
+        appended, applied locally, and broadcast — each ack is a host that
+        has atomically flipped.  Raises `ReplicationError` if the flip
+        itself falls short of quorum (anti-entropy heals stragglers)."""
+        self._require_leader("promote")
+        with self._mutate:
+            with self._meta:
+                n = self.local.n_versions(name)     # raises on unknown name
+                v = n - 1 if version is None else version
+                if not 0 <= v < n:
+                    raise IndexError(f"{name!r} has no version {v}")
+                h = self._vhash.get(name, [None] * n)[v]
+            # phase 1: the fleet must HOLD v before anyone flips to it
+            need = self._quorum_size()
+            holders = 1                             # the leader holds it
+            for p in self.transport.peers():
+                try:
+                    r = self.transport.send(p, {"req": "prepare", "name": name,
+                                                "version": v, "hash": h})
+                    holders += 1 if r.get("ok") else 0
+                except TransportError:
+                    pass
+            if holders < need:
+                raise ReplicationError(
+                    f"promote {name!r} v{v}: only {holders}/{need} hosts hold "
+                    f"the version — aborted before any flip (fleet still "
+                    f"uniformly on the old version)")
+            # phase 2: append + flip everywhere
+            with self._meta:
+                op = Op(seq=self._applied.get(name, -1) + 1, kind="promote",
+                        name=name, version=v)
+                self.local.promote(name, v)
+                self._commit_meta(op, None)
+            flipped = 1 + self._broadcast(op, None)
+            if flipped < need:
+                raise ReplicationError(
+                    f"promote {name!r} v{v}: flip acked by {flipped}/{need} "
+                    f"hosts — the leader IS live on v{v}; stragglers converge "
+                    f"via anti-entropy")
+            return v
+
+    def rollback(self, name: str) -> int:
+        """Revert the fleet to the previous live version (replicated like
+        any op; no quorum gate — rollback is the emergency path)."""
+        self._require_leader("rollback")
+        with self._mutate:
+            with self._meta:
+                v = self.local.rollback(name)
+                op = Op(seq=self._applied.get(name, -1) + 1, kind="rollback",
+                        name=name, version=v)
+                self._commit_meta(op, None)
+            self._broadcast(op, None)
+            return v
+
+    # ---- anti-entropy ------------------------------------------------------
+    def sync(self) -> int:
+        """Pull every op this host is missing from the leader (skipping
+        state payloads already held, by content hash); returns the number
+        of ops applied.  How a late joiner or healed partition converges."""
+        if self.role == "leader":
+            return 0
+        if hasattr(self.transport, "add_peer") and \
+                self.leader not in self.transport.peers():
+            raise TransportError(f"leader {self.leader!r} not in peer book")
+        with self._meta:
+            have = dict(self._applied)
+            hashes = list(self._states)
+        reply = self.transport.send(self.leader, {
+            "req": "pull", "have": have, "hashes": hashes})
+        payloads = reply.get("payloads", {})
+        applied = 0
+        for ops in reply.get("ops", {}).values():
+            for op in ops:
+                applied += 1 if self._apply(op, payloads) else 0
+        return applied
+
+    def join(self) -> int:
+        """TCP fleets: announce this host's address to the leader (so
+        broadcasts reach it), then `sync()`.  No-op on transports without
+        an address book (the LocalBus knows everyone already)."""
+        addr = getattr(self.transport, "address", None)
+        if addr is not None:
+            self.transport.send(self.leader, {
+                "req": "join", "host_id": self.transport.host_id,
+                "address": tuple(addr)})
+        return self.sync()
+
+    # ---- internals: apply / log -------------------------------------------
+    def _commit_meta(self, op: Op, payload: Optional[PyTree]) -> None:
+        """Record an op already applied to the local registry (caller holds
+        `_meta`): log, applied seq, content store, version->hash map."""
+        self._log.setdefault(op.name, []).append(op)
+        self._applied[op.name] = op.seq
+        if op.state_hash is not None and payload is not None:
+            self._states.setdefault(op.state_hash, payload)
+        if op.kind == "register":
+            self._vhash[op.name] = [op.state_hash]
+        elif op.kind == "push":
+            self._vhash.setdefault(op.name, []).append(op.state_hash)
+
+    def _apply(self, op: Op, payloads: Dict[str, PyTree]) -> bool:
+        """Idempotently apply a replicated op to the local registry.
+        Returns True if it mutated (False: already applied).  Raises
+        `ReplicationError` on a sequence gap or missing payload — the
+        caller decides whether to sync and retry."""
+        with self._meta:
+            applied = self._applied.get(op.name, -1)
+            if op.seq <= applied:
+                return False                        # replay — idempotent skip
+            if op.seq > applied + 1:
+                raise ReplicationError(
+                    f"op gap for {op.name!r}: have seq {applied}, got "
+                    f"{op.seq} — sync required")
+            payload = None
+            if op.state_hash is not None:
+                payload = self._states.get(op.state_hash,
+                                           payloads.get(op.state_hash))
+                if payload is None:
+                    raise ReplicationError(
+                        f"missing payload {op.state_hash} for "
+                        f"{op.kind} {op.name!r} — sync required")
+            if op.kind == "register":
+                self.local.register(op.name, op.model, payload,
+                                    ensemble=op.ensemble, replace=True)
+            elif op.kind == "push":
+                got = self.local.push(op.name, payload)
+                if got != op.version:
+                    raise ReplicationError(
+                        f"push {op.name!r}: local version {got} != "
+                        f"op version {op.version} — log divergence")
+            elif op.kind == "promote":
+                self.local.promote(op.name, op.version)
+            elif op.kind == "rollback":
+                self.local.rollback(op.name)
+            else:
+                raise ReplicationError(f"unknown op kind {op.kind!r}")
+            self._commit_meta(op, payload)
+            return True
+
+    def _broadcast(self, op: Op, payloads: Optional[Dict[str, PyTree]]) -> int:
+        """Send one op to every peer; returns the ack count.  A peer that
+        reports a gap gets one inline catch-up (sync bundle) retry; an
+        unreachable peer is simply not acked (anti-entropy later)."""
+        acks = 0
+        msg = {"req": "op", "op": op, "payloads": payloads or {}}
+        for p in self.transport.peers():
+            try:
+                r = self.transport.send(p, msg)
+                if not r.get("ok") and r.get("need_sync"):
+                    self._heal_peer(p, r.get("have", {}), r.get("hashes", []))
+                    r = self.transport.send(p, msg)
+                acks += 1 if r.get("ok") else 0
+            except TransportError:
+                pass
+        return acks
+
+    def _heal_peer(self, peer: str, have: Dict[str, int],
+                   hashes: List[str]) -> None:
+        """Push a catch-up bundle (ops past `have`, payloads not in
+        `hashes`) to a peer that nacked with a gap."""
+        bundle = self._pull_bundle(have, hashes)
+        self.transport.send(peer, {"req": "catchup", **bundle})
+
+    def _pull_bundle(self, have: Dict[str, int],
+                     hashes: List[str]) -> Dict[str, Any]:
+        held = set(hashes)
+        with self._meta:
+            ops: Dict[str, List[Op]] = {}
+            payloads: Dict[str, PyTree] = {}
+            for name, log in self._log.items():
+                missing = [op for op in log if op.seq > have.get(name, -1)]
+                if not missing:
+                    continue
+                ops[name] = missing
+                for op in missing:
+                    if op.state_hash is not None and op.state_hash not in held:
+                        payloads[op.state_hash] = self._states[op.state_hash]
+            return {"ops": ops, "payloads": payloads}
+
+    # ---- incoming messages -------------------------------------------------
+    def _handle(self, msg: Message) -> Message:
+        req = msg.get("req")
+        if req == "op":
+            return self._handle_op(msg)
+        if req == "prepare":
+            return self._handle_prepare(msg)
+        if req == "pull":
+            return self._pull_bundle(msg.get("have", {}), msg.get("hashes", []))
+        if req == "catchup":
+            payloads = msg.get("payloads", {})
+            for ops in msg.get("ops", {}).values():
+                for op in ops:
+                    self._apply(op, payloads)
+            return {"ok": True}
+        if req == "status":
+            return self.status()
+        if req == "join":
+            add_peer = getattr(self.transport, "add_peer", None)
+            if add_peer is not None:
+                add_peer(msg["host_id"], tuple(msg["address"]))
+            return {"ok": True}
+        return {"ok": False, "error": f"unknown request {req!r}"}
+
+    def _handle_op(self, msg: Message) -> Message:
+        try:
+            self._apply(msg["op"], msg.get("payloads", {}))
+            return {"ok": True}
+        except ReplicationError:
+            # gap or missing payload: try a self-serve sync from the leader
+            # (reachable on a LocalBus; on TCP the leader's retry heals us)
+            try:
+                self.sync()
+                self._apply(msg["op"], msg.get("payloads", {}))
+                return {"ok": True}
+            except (TransportError, ReplicationError):
+                with self._meta:
+                    return {"ok": False, "need_sync": True,
+                            "have": dict(self._applied),
+                            "hashes": list(self._states)}
+
+    def _handle_prepare(self, msg: Message) -> Message:
+        name, v, h = msg["name"], msg["version"], msg.get("hash")
+        if self._holds(name, v, h):
+            return {"ok": True}
+        try:
+            self.sync()                             # catch up, then re-check
+        except (TransportError, ReplicationError):
+            pass
+        return {"ok": self._holds(name, v, h)}
+
+    def _holds(self, name: str, version: int, h: Optional[str]) -> bool:
+        """True iff this host holds `version` of `name` with the expected
+        CONTENT.  Version count alone is not enough: after a
+        register(replace=True) a stale host's old generation can have the
+        same version ids with different states — the hash is the truth."""
+        try:
+            if not 0 <= version < self.local.n_versions(name):
+                return False
+        except KeyError:
+            return False
+        with self._meta:
+            vh = self._vhash.get(name, [])
+        local_h = vh[version] if version < len(vh) else None
+        return h is None or local_h == h
+
+    def _quorum_size(self) -> int:
+        n = 1 + len(self.transport.peers())
+        return self.quorum if self.quorum is not None else n // 2 + 1
+
+    def _require_leader(self, what: str) -> None:
+        if self.role != "leader":
+            raise ReplicationError(
+                f"{what} on follower {self.transport.host_id!r}: followers "
+                f"are read replicas — mutate via the leader ({self.leader!r})")
+
+    def close(self) -> None:
+        self.transport.close()

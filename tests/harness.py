@@ -14,18 +14,23 @@ happen:
     rendezvous on `Ticket.wait()` (an event wait, not a sleep).  This is
     the mode for shutdown/drain and promote-rollback race tests.
 
+`FleetHarness` extends the same determinism to a replicated fleet: N
+hosts on one `LocalBus` (synchronous in-thread delivery), each with its
+own `DRService` over a `ReplicatedRegistry`, sharing one `VirtualClock`.
+
 Tests in this repo never call `time.sleep`; if you need time to pass,
 advance the clock.
 """
 
 from __future__ import annotations
 
-from typing import Any, Hashable, Optional
+from typing import Any, Dict, Hashable, List, Optional
 
 import jax
 
 from repro.dr import DRModel, EASIStage, RPStage
-from repro.serve import BucketPolicy, DRService, DeadlineScheduler, VirtualClock
+from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, LocalBus,
+                         ReplicatedRegistry, VirtualClock)
 
 
 def small_model(m: int = 32, p: int = 16, n: int = 8, block: int = 4) -> DRModel:
@@ -99,3 +104,78 @@ class ServingHarness:
 
     def __exit__(self, *exc: Any) -> None:
         self.shutdown()
+
+
+class FleetHarness:
+    """A replicated serving fleet on one `LocalBus` and one `VirtualClock`.
+
+    `n_hosts` hosts (`h0` the leader, `h1…` followers), each wrapping its
+    `ReplicatedRegistry` in its own `DRService` — so a test drives real
+    request paths on every replica while mutations go through the leader.
+    Deterministic like `ServingHarness`: LocalBus delivery is synchronous
+    in the caller's thread and all serving time is virtual.
+
+        fleet = FleetHarness(n_hosts=3)
+        fleet.register("m", model, state)       # fleet-wide v0
+        v = fleet.push_promote("m", new_state)  # two-phase atomic flip
+        assert fleet.live_versions("m") == [v, v, v]
+    """
+
+    def __init__(self, n_hosts: int = 3, *, quorum: Optional[int] = None,
+                 buckets: Optional[BucketPolicy] = None, **service_kw: Any):
+        if n_hosts < 1:
+            raise ValueError("need at least the leader host")
+        self.clock = VirtualClock()
+        self.bus = LocalBus()
+        self.leader = ReplicatedRegistry(self.bus.attach("h0"), role="leader",
+                                         quorum=quorum)
+        self.registries: List[ReplicatedRegistry] = [self.leader]
+        for i in range(1, n_hosts):
+            self.registries.append(ReplicatedRegistry(
+                self.bus.attach(f"h{i}"), role="follower", leader="h0",
+                quorum=quorum))
+        kw = dict(service_kw)
+        kw.setdefault("buckets", buckets if buckets is not None
+                      else BucketPolicy(min_bucket=4, max_bucket=32))
+        self.services: List[DRService] = [
+            DRService(registry=reg, clock=self.clock, **kw)
+            for reg in self.registries]
+
+    # ---- fleet operations (leader) ----------------------------------------
+    def register(self, name: str, model: DRModel, state: Any, **kw: Any) -> int:
+        return self.leader.register(name, model, state, **kw)
+
+    def push_promote(self, name: str, state: Any) -> int:
+        v = self.leader.push(name, state)
+        return self.leader.promote(name, v)
+
+    def join_host(self, host_id: str, **service_kw: Any) -> DRService:
+        """Attach a late host: it syncs from the leader on construction
+        (anti-entropy) and gets its own serving engine."""
+        reg = ReplicatedRegistry(self.bus.attach(host_id), role="follower",
+                                 leader="h0")
+        kw = dict(service_kw)
+        kw.setdefault("buckets", self.services[0].buckets)
+        svc = DRService(registry=reg, clock=self.clock, **kw)
+        self.registries.append(reg)
+        self.services.append(svc)
+        return svc
+
+    # ---- fleet observation -------------------------------------------------
+    def live_versions(self, name: str) -> List[Optional[int]]:
+        """Per-host live version (None where the host doesn't know `name`);
+        a converged fleet shows one uniform value."""
+        out: List[Optional[int]] = []
+        for reg in self.registries:
+            try:
+                out.append(reg.get(name).version)
+            except KeyError:
+                out.append(None)
+        return out
+
+    def converged(self, name: str) -> bool:
+        vs = self.live_versions(name)
+        return None not in vs and len(set(vs)) == 1
+
+    def statuses(self) -> Dict[str, Dict[str, Any]]:
+        return {r.transport.host_id: r.status() for r in self.registries}

@@ -10,7 +10,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.data import synthetic
 from repro.models import blocks
-from repro.serve.batching import BoundedCompileCache, BucketPolicy, MicroBatcher
+from repro.serve.batching import (BoundedCompileCache, BucketPolicy,
+                                  MicroBatcher, QueueFull)
 from repro.train import optimizer as opt_mod
 
 
@@ -139,6 +140,30 @@ class TestBatchingInvariants:
         assert got == sent                  # lossless + no dupes + FIFO
         assert mb.queue_depth() == 0
         assert mb.submitted == mb.served == seq
+
+    @settings(max_examples=50, deadline=None)
+    @given(data=st.data(), max_queue=st.integers(1, 32),
+           pre=st.lists(st.integers(1, 32), max_size=8))
+    def test_admissible_request_always_admits_after_drain(self, data,
+                                                          max_queue, pre):
+        """Any request with rows <= max_queue is ADMISSIBLE: whatever the
+        queue held before, it enters after one full drain — QueueFull is
+        always transient.  Oversized requests are a ValueError (caller
+        bug), never an eternally-retried QueueFull."""
+        mb = MicroBatcher(max_queue=max_queue)
+        for r in pre:
+            try:
+                mb.submit("k", "p", min(r, max_queue))
+            except QueueFull:
+                pass
+        rows = data.draw(st.integers(1, max_queue))
+        try:
+            mb.submit("k", "q", rows)
+        except QueueFull:
+            mb.drain()
+            mb.submit("k", "q", rows)       # must admit on an empty queue
+        with pytest.raises(ValueError):
+            mb.submit("k", "r", max_queue + data.draw(st.integers(1, 8)))
 
     @settings(max_examples=50, deadline=None)
     @given(keys=st.lists(st.integers(0, 12), min_size=1, max_size=60),

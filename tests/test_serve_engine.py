@@ -6,6 +6,7 @@ ragged-batch degrade (subprocess, 8 host devices)."""
 
 import subprocess
 import sys
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +66,32 @@ class TestBoundedCompileCache:
         assert len(c) == 2
         assert (c.hits, c.misses, c.evictions) == (1, 3, 1)
         assert c.compiles == 3
+
+    def test_lost_build_race_counts_as_miss(self):
+        """Satellite bugfix: a thread that built but lost the insert race
+        did REAL compile work — it must book a miss (misses == programs
+        actually built), tracked as a race, not a phantom hit."""
+        c = BoundedCompileCache(maxsize=4)
+        entered, release = threading.Event(), threading.Event()
+
+        def slow_build():
+            entered.set()
+            release.wait(10.0)
+            return "slow"
+
+        out = []
+        t = threading.Thread(
+            target=lambda: out.append(c.get_or_build("k", slow_build)))
+        t.start()
+        assert entered.wait(10.0)
+        # this thread's build wins the insert while the slow build hangs
+        assert c.get_or_build("k", lambda: "fast") == "fast"
+        release.set()
+        t.join(10.0)
+        assert out == ["fast"]              # loser returns the winner's fn
+        assert (c.hits, c.misses, c.races) == (0, 2, 1)
+        st = c.stats()
+        assert st["races"] == 1 and st["size"] == 1
 
     def test_dr_transform_cache_is_bounded(self, monkeypatch):
         """Satellite: the old lru_cache never evicted live meshes — the
@@ -164,6 +191,39 @@ class TestMicroBatchedServing:
         assert svc.batcher.rejected == 1
         svc.flush()
         svc.submit("m", jnp.ones((7, 32)))        # drained queue admits again
+
+    def test_never_admittable_request_is_value_error(self):
+        """Satellite bugfix: rows > max_queue can NEVER admit — that is a
+        caller bug (chunk your request), not transient backpressure, so it
+        must not masquerade as a retryable QueueFull."""
+        mb = MicroBatcher(max_queue=8)
+        with pytest.raises(ValueError, match="can never be admitted"):
+            mb.submit("a", "x", 9)
+        assert mb.rejected == 0                   # not a backpressure event
+        assert mb.submit("a", "x", 8).rows == 8   # exactly max_queue admits
+        # the same contract through the service front door
+        svc, _ = _service(_model(), max_queue=16)
+        with pytest.raises(ValueError, match="can never be admitted"):
+            svc.submit("m", jnp.ones((17, 32)))
+
+    def test_replace_mid_queue_fails_only_stale_tickets(self):
+        """Satellite: tickets queued for a model that is then
+        register(replace=True)d with a different in_dim must fail alone
+        with a clear message at flush — not explode the whole group inside
+        jnp.concatenate."""
+        model = _model()                          # in_dim 32
+        svc, _ = _service(model)
+        stale = [svc.submit("m", jnp.ones((r, 32))) for r in (5, 3)]
+        new_model = _model(m=16)                  # in_dim 16
+        svc.register("m", new_model, new_model.init(jax.random.PRNGKey(1)),
+                     replace=True)
+        fresh = svc.submit("m", jnp.ones((4, 16)))
+        svc.flush()
+        for t in stale:
+            with pytest.raises(ValueError, match="replaced"):
+                t.result()
+        assert fresh.result().shape == (4, 8)     # the valid ticket served
+        assert svc.batcher.queue_depth() == 0
 
     def test_request_validation(self):
         svc, _ = _service(_model())
@@ -269,6 +329,65 @@ class TestTrainWhileServe:
         svc, _ = _service(_model())
         with pytest.raises(RuntimeError, match="nothing staged"):
             svc.promote("m")
+
+    @pytest.mark.slow
+    def test_threaded_stream_vs_promote_loses_no_update(self):
+        """Satellite bugfix regression (100 consecutive runs): one thread
+        streams blocks through serve_and_update while another hammers
+        promote().  Without the per-name lock, an update landing between
+        promote's staged-pop and registry-push chains onto a pre-promote
+        base and is silently orphaned.  With it, the final live state must
+        equal the offline fold of EVERY block in stream order, no matter
+        where the promotes landed."""
+        model = _model(block=4)
+        svc = DRService(buckets=BucketPolicy(min_bucket=4, max_bucket=32))
+        upd = jax.jit(model.update)
+        for run in range(100):
+            name = f"m{run}"
+            st = model.init(jax.random.PRNGKey(run))
+            svc.register(name, model, st)
+            blocks = jax.random.normal(jax.random.PRNGKey(1000 + run),
+                                       (8, 4, 32))
+            errors = []
+
+            def stream(name=name, blocks=blocks):
+                try:
+                    for blk in blocks:
+                        svc.serve_and_update(name, blk)
+                except Exception as e:            # noqa: BLE001
+                    errors.append(repr(e))
+
+            def promoter(name=name):
+                try:
+                    for _ in range(16):
+                        try:
+                            svc.promote(name)
+                        except RuntimeError:      # nothing staged right now
+                            pass
+                except Exception as e:            # noqa: BLE001
+                    errors.append(repr(e))
+
+            ts = [threading.Thread(target=stream),
+                  threading.Thread(target=promoter)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(60.0)
+            assert not errors, (run, errors)
+            try:
+                svc.promote(name)                 # land any remaining staged
+            except RuntimeError:
+                pass
+            assert svc.metrics()["updates_applied"][name] == 8, run
+            manual = st
+            for blk in blocks:
+                manual = upd(manual, blk)
+            final = svc.registry.get(name).state
+            for a, b in zip(jax.tree.leaves(final), jax.tree.leaves(manual)):
+                np.testing.assert_allclose(np.asarray(a, np.float64),
+                                           np.asarray(b, np.float64),
+                                           rtol=1e-5, atol=1e-6,
+                                           err_msg=f"run {run}")
 
     def test_ensemble_is_serve_only(self):
         model = _model()
