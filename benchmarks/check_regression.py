@@ -1,0 +1,75 @@
+"""Benchmark regression gate: measured rows vs the committed baseline.
+
+CI runs `serve_latency.py --smoke --json serve_latency.json`, uploads
+the JSON as an artifact (the start of a perf trajectory across PRs), and
+then gates the metrics named in `benchmarks/baseline.json` — each entry
+is `{row name: {metric: ceiling-ish baseline value}}` and a measurement
+fails only past `factor` × baseline (default 2x: generous on purpose —
+shared CI runners are noisy; the gate exists to catch order-of-magnitude
+regressions like an accidental re-compile per request or a promote that
+stopped batching its RPCs, not 10% drift).  Only load-robust metrics
+belong in the baseline: the deadline row's p99 rides on real-clock
+scheduler wakeups and swings 10x with CPU contention (its behavior is
+asserted by `--smoke` instead), while pow2 p99, flip_ms, and
+failover_ms stay within ~2x under a fully loaded host.
+
+Run: python benchmarks/check_regression.py measured.json \
+         benchmarks/baseline.json [--factor 2.0]
+Exit code 1 on any regression; prints a comparison table either way.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("measured", help="JSON written by serve_latency --json")
+    ap.add_argument("baseline", help="committed benchmarks/baseline.json")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="fail past factor x baseline (default 2.0)")
+    args = ap.parse_args()
+
+    with open(args.measured) as f:
+        measured = {row["name"]: row for row in json.load(f)}
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = []
+    print(f"{'row':<40} {'metric':<14} {'measured':>12} {'baseline':>12} "
+          f"{'limit':>12}  verdict")
+    for name, metrics in sorted(baseline.items()):
+        row = measured.get(name)
+        if row is None:
+            failures.append(f"{name}: row missing from measured output")
+            print(f"{name:<40} {'-':<14} {'MISSING':>12}")
+            continue
+        for metric, base in sorted(metrics.items()):
+            got = row.get(metric)
+            if got is None or not isinstance(got, (int, float)):
+                failures.append(f"{name}: metric {metric!r} missing")
+                print(f"{name:<40} {metric:<14} {'MISSING':>12}")
+                continue
+            limit = args.factor * float(base)
+            ok = float(got) <= limit
+            print(f"{name:<40} {metric:<14} {float(got):>12.2f} "
+                  f"{float(base):>12.2f} {limit:>12.2f}  "
+                  f"{'ok' if ok else 'REGRESSION'}")
+            if not ok:
+                failures.append(
+                    f"{name}.{metric} = {got:.2f} > {args.factor:g}x "
+                    f"baseline {base:.2f}")
+    if failures:
+        print("\nregression gate FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    print("\nregression gate ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,13 +29,27 @@ synchronous bus), while reader threads hammering the follower engines
 count how many requests were answered against the stale version during
 the flip window.
 
+A failover row runs the same fleet with an `Elector` per host (real
+`MonotonicClock`, loopless polling) and measures `failover_ms`: the time
+from killing the leader to the FIRST successful promote on the newly
+elected leader — the fleet-availability number the election layer exists
+to bound (≈ election timeout + one vote round + one two-phase flip).
+
+`--json out.json` additionally writes the rows machine-readably (the
+`derived` k=v pairs parsed into fields); CI uploads that artifact and
+gates `flip_ms` / `p99_us` / `failover_ms` against
+`benchmarks/baseline.json` at a generous 2x via
+`benchmarks/check_regression.py`.
+
 Run: PYTHONPATH=src python benchmarks/serve_latency.py [--smoke] [--full]
-(or through `python -m benchmarks.run --only serve_latency`).
+[--json out.json] (or through `python -m benchmarks.run --only
+serve_latency`).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import threading
 import time
 
@@ -44,8 +58,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dr import DRModel, EASIStage, RPStage
-from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, LocalBus,
-                         ReplicatedRegistry)
+from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, Elector,
+                         LocalBus, ReplicatedRegistry, ReplicationError)
 from repro.serve.batching import EXACT
 
 
@@ -199,7 +213,59 @@ def run(fast: bool = True):
                  f"stale_served_during_flip={stale};"
                  f"reads_during_flip_window={len(window)};"
                  f"final_versions={'/'.join(map(str, finals))}"))
+
+    # failover: kill the leader, elect, first successful promote on the
+    # winner.  Electors run loopless on the REAL clock (this is a wall-time
+    # benchmark): the driver polls them the way a background loop would.
+    bus = LocalBus()
+    leader = ReplicatedRegistry(bus.attach("h0"), role="leader")
+    regs = [leader] + [ReplicatedRegistry(bus.attach(f"h{i}"),
+                                          role="follower", leader="h0")
+                       for i in (1, 2)]
+    electors = [Elector(r, seed=i, election_timeout_ms=(30.0, 60.0),
+                        heartbeat_interval_ms=10.0)
+                for i, r in enumerate(regs)]
+    leader.register("dr", model, state)
+    v = leader.push("dr", retrained)            # committed fleet-wide
+    bus.partition("h0")                         # the leader dies
+    t0 = time.perf_counter()
+    deadline = t0 + 30.0
+    new_v = None
+    while time.perf_counter() < deadline:
+        for e in electors[1:]:
+            e.poll()
+        cands = [r for r in regs[1:] if r.role == "leader"]
+        if not cands:
+            time.sleep(1e-3)
+            continue
+        try:
+            new_v = cands[0].promote("dr", v)   # first promote on the winner
+            break
+        except ReplicationError:
+            time.sleep(1e-3)                    # vote round still settling
+    failover_ms = (time.perf_counter() - t0) * 1e3
+    assert new_v == v, "failover benchmark never promoted on a new leader"
+    winners = [r.transport.host_id for r in regs[1:] if r.role == "leader"]
+    term = max(r.term for r in regs[1:])
+    finals = sorted(r.get("dr").version for r in regs[1:])
+    rows.append(("serve_latency/failover", failover_ms * 1e3,
+                 f"hosts=3;failover_ms={failover_ms:.2f};"
+                 f"winner={winners[0]};term={term};"
+                 f"final_versions={'/'.join(map(str, finals))}"))
     return rows
+
+
+def _parse_derived(derived: str):
+    out = {}
+    for kv in derived.split(";"):
+        if "=" not in kv:
+            continue
+        k, v = kv.split("=", 1)
+        try:
+            out[k] = float(v) if "." in v or "e" in v.lower() else int(v)
+        except ValueError:
+            out[k] = v
+    return out
 
 
 def main():
@@ -207,12 +273,21 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="fast run + sanity assertions (CI)")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write machine-readable rows (CI artifact + "
+                         "regression gate input)")
     args = ap.parse_args()
 
     rows = run(fast=not args.full)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        payload = [{"name": name, "us_per_call": us, **_parse_derived(d)}
+                   for name, us, d in rows]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json} ({len(payload)} rows)")
 
     if args.smoke:
         by = {n: d for n, _, d in rows}
@@ -233,6 +308,11 @@ def main():
         # the fleet flip must end uniformly on the new version — a mixed
         # final epoch means the two-phase promote tore the deployment
         assert "final_versions=1/1/1" in by["serve_latency/replicated_promote"]
+        # failover: both SURVIVING hosts must be uniformly on the promoted
+        # version, flipped by a leader elected at a real (>0) term
+        assert "final_versions=1/1" in by["serve_latency/failover"]
+        assert int(by["serve_latency/failover"]
+                   .split("term=")[1].split(";")[0]) >= 1
         print("SERVE_LATENCY_SMOKE_OK")
 
 

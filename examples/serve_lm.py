@@ -21,6 +21,14 @@ on the leader, and the train-while-serve promote is a two-phase
 fleet-wide flip — after it returns, every host in the fleet answers with
 the retrained state, not just the host that retrained.
 
+The finale is a leader FAILOVER: each host gets an `Elector`
+(term-numbered election over the same bus, real `MonotonicClock`), the
+leader host is partitioned away, a follower wins a higher term, and the
+next retrained state is promoted through the NEW leader — issued on a
+follower and forwarded automatically.  The healed old leader is fenced
+by the higher term, rejoins as a follower, and converges by
+anti-entropy: retraining keeps shipping no matter which host dies.
+
 Run: PYTHONPATH=src python examples/serve_lm.py [--tokens 16] [--batch 4]
 """
 
@@ -35,8 +43,8 @@ from repro.configs import registry
 from repro.dr import DRModel, EASIStage, RPStage
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import api
-from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, LocalBus,
-                         ReplicatedRegistry)
+from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, Elector,
+                         LocalBus, ReplicatedRegistry, ReplicationError)
 
 
 def main():
@@ -140,6 +148,44 @@ def main():
             print(f"  slo[{name}/{bucket}]: n={e2e['count']} "
                   f"p50={e2e['p50_ms']:.2f}ms p99={e2e['p99_ms']:.2f}ms "
                   f"queue_p50={cell['queue_delay']['p50_ms']:.2f}ms")
+
+    # ---- leader failover: kill h0, elect a successor, keep promoting ------
+    regs = [leader] + followers
+    electors = [Elector(r, seed=i, election_timeout_ms=(30.0, 60.0),
+                        heartbeat_interval_ms=10.0)
+                for i, r in enumerate(regs)]
+    bus.partition("h0")                     # the leader host dies
+    t0 = time.perf_counter()
+    new_lead = None
+    while new_lead is None:
+        for e in electors[1:]:              # the survivors' election loops
+            e.poll()
+        new_lead = next((r for r in followers if r.role == "leader"), None)
+        time.sleep(1e-3)
+    # retrain once more and promote through the OTHER follower — the
+    # replicated registry forwards the mutation to whoever leads now
+    other = next(r for r in followers if r is not new_lead)
+    state2 = dr.update(new_lead.get("frames").state, blocks[0])
+    v2 = None
+    while v2 is None:
+        try:
+            v2 = other.promote("frames", other.push("frames", state2))
+        except ReplicationError:            # vote round still settling
+            time.sleep(1e-3)
+    failover_ms = (time.perf_counter() - t0) * 1e3
+    bus.heal()                              # h0 returns from the dead...
+    while leader.role == "leader":          # ...and gets fenced by a beat
+        for e in electors:
+            e.poll()
+        time.sleep(1e-3)
+    leader.sync()                           # anti-entropy catch-up
+    final = {r.transport.host_id: r.get("frames").version for r in regs}
+    assert set(final.values()) == {v2}, final
+    st = new_lead.leader_status()
+    print(f"failover: killed h0 -> {st['leader']} leads term {st['term']} "
+          f"(kill -> promote v{v2} on the new leader in {failover_ms:.0f} ms, "
+          f"issued on follower {other.transport.host_id} and forwarded); "
+          f"healed h0 rejoined as {leader.role!r}, fleet live={final}")
 
 
 if __name__ == "__main__":

@@ -14,12 +14,14 @@ factories remain as thin adapters over the same bounded compile cache
 for one-shot callers.
 """
 
-from repro.serve import (batching, clock, dr_serve, engine, registry,
-                         replication, scheduler, serve_step, slo, transport)
+from repro.serve import (batching, clock, dr_serve, election, engine,
+                         registry, replication, scheduler, serve_step, slo,
+                         transport)
 from repro.serve.batching import (BoundedCompileCache, BucketPolicy,
                                   MicroBatcher, QueueFull, Ticket)
 from repro.serve.clock import Clock, MonotonicClock, VirtualClock
 from repro.serve.dr_serve import dr_transform, make_dr_transform
+from repro.serve.election import Elector
 from repro.serve.engine import DRService
 from repro.serve.registry import ModelRegistry
 from repro.serve.replication import (Op, ReplicatedRegistry, ReplicationError,
@@ -31,7 +33,8 @@ from repro.serve.transport import (LocalBus, TCPTransport, Transport,
 
 __all__ = [
     "engine", "registry", "batching", "serve_step", "dr_serve",
-    "scheduler", "clock", "slo", "replication", "transport",
+    "scheduler", "clock", "slo", "replication", "transport", "election",
+    "Elector",
     "DRService", "ModelRegistry", "DeadlineScheduler", "SchedulerClosed",
     "BucketPolicy", "BoundedCompileCache", "MicroBatcher", "QueueFull",
     "Ticket", "Clock", "MonotonicClock", "VirtualClock",

@@ -50,6 +50,7 @@ from repro.serve.batching import (BoundedCompileCache, BucketPolicy,
                                   MicroBatcher, Ticket)
 from repro.serve.clock import Clock, MonotonicClock
 from repro.serve.registry import ModelRegistry, Snapshot
+from repro.serve.replication import state_hash
 from repro.serve.slo import SLOTracker
 
 PyTree = Any
@@ -156,7 +157,8 @@ class DRService:
                         f"nothing staged for {name!r}; run serve_and_update "
                         f"first or pass an explicit version")
                 try:
-                    if pushed is not None and pushed[0] is staged:
+                    if pushed is not None and pushed[0] is staged and \
+                            self._pushed_still_valid(name, pushed[1], staged):
                         # this exact chain was already pushed by a promote
                         # that then failed — reuse its version, don't ship
                         # a duplicate state to the registry (or the fleet)
@@ -182,8 +184,34 @@ class DRService:
                     raise
             return self.registry.promote(name, version)
 
+    def _pushed_still_valid(self, name: str, version: int,
+                            staged: PyTree) -> bool:
+        """Is a previously-pushed staged version still safe to re-promote?
+        Over a plain registry, always (nothing can unseat a pushed
+        version).  Over a replicated registry, ask whether the CURRENT
+        leader holds that version with the staged content — after a
+        failover the new leader may never have seen the push, or hold
+        different bytes under the same version id; re-promoting blind
+        would flip the fleet to the wrong state."""
+        holds = getattr(self.registry, "holds_content", None)
+        if holds is None:
+            return True
+        return holds(name, version, state_hash(staged))
+
     def rollback(self, name: str) -> int:
         return self.registry.rollback(name)
+
+    def leader_status(self) -> Dict[str, Any]:
+        """Who leads the registry this service mutates through, and at
+        what election term.  Over a plain `ModelRegistry` the service IS
+        its own (static) leader; over a `ReplicatedRegistry` with an
+        elector attached this tracks failovers — and `promote()` keeps
+        working across them, because the replicated registry re-routes
+        mutations to whichever host currently leads."""
+        status = getattr(self.registry, "leader_status", None)
+        if status is not None:
+            return status()
+        return {"host": None, "role": "leader", "leader": None, "term": 0}
 
     def staged_state(self, name: str) -> Optional[PyTree]:
         with self._tws_guard:

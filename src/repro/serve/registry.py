@@ -121,6 +121,24 @@ class ModelRegistry:
             e.live, e.prev_live = e.prev_live, e.live
             return e.live
 
+    def remove(self, name: str) -> None:
+        """Drop an entry outright (no-op if absent).  Replication's
+        anti-entropy uses this to evict a phantom name a deposed leader
+        registered while partitioned — an entry no other host has."""
+        with self._lock:
+            self._entries.pop(name, None)
+
+    def adopt(self, name: str, other: "ModelRegistry") -> None:
+        """Atomically install `name`'s entry from another registry.
+        Anti-entropy's reset-replay rebuilds a diverged name in a scratch
+        registry off to the side and adopts the result in one step, so a
+        concurrent reader never observes a partially-replayed entry (e.g.
+        the live pointer rewound to version 0 mid-replay)."""
+        with other._lock:
+            entry = other._entries[name]
+        with self._lock:
+            self._entries[name] = entry
+
     # ---- reads -------------------------------------------------------------
     def get(self, name: str) -> Snapshot:
         with self._lock:

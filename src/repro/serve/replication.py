@@ -35,6 +35,13 @@ Wiring into serving is one constructor hook:
     f1 = ReplicatedRegistry(bus.attach("h1"), role="follower", leader="h0")
     svc0 = DRService(registry=leader)       # mutations go fleet-wide
     svc1 = DRService(registry=f1)           # read replica, same API
+
+Leadership is STATIC by default (the PR 4 contract: followers are read
+replicas, mutating one raises).  Attach a `repro.serve.election.Elector`
+per host and it becomes dynamic: the fleet elects a new leader when the
+current one dies, every replication RPC carries the election `term` so
+stale (deposed) leaders are fenced mid-mutation, and mutations issued on
+a non-leader host forward to whoever currently leads.
 """
 
 from __future__ import annotations
@@ -56,6 +63,11 @@ PyTree = Any
 
 class ReplicationError(RuntimeError):
     """A fleet mutation could not reach its quorum / role contract."""
+
+
+class _Fenced(ReplicationError):
+    """Internal: a message's term went stale between the handler's gate
+    and the apply — reply with a fenced nack, not a sync request."""
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +119,11 @@ class Op:
     ensemble: Optional[int] = None
     replace: bool = False
     model: Any = None
+    # the election term of the leader that created this op (0 in static
+    # fleets).  Two logs that agree on (seq, term) prefixes agree on
+    # content — how anti-entropy detects a deposed leader's uncommitted
+    # suffix and how voters compare log freshness (term before length).
+    term: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +158,12 @@ class ReplicatedRegistry:
         self.leader = transport.host_id if role == "leader" else leader
         self.quorum = quorum
         self.local = ModelRegistry()
+        # election state: `term` is the fencing epoch every replication RPC
+        # carries (static fleets stay at 0 forever — no fencing triggers);
+        # `elector` is attached by `repro.serve.election.Elector` and turns
+        # on dynamic roles + forwarding of mutations to the current leader.
+        self.term = 0
+        self.elector: Optional[Any] = None
         # `_mutate` serializes whole leader mutations (append + broadcast +
         # quorum wait).  `_meta` guards the log/state-store/applied maps and
         # is never held across transport I/O, so pull/status handlers from
@@ -175,6 +198,76 @@ class ReplicatedRegistry:
     def n_versions(self, name: str) -> int:
         return self.local.n_versions(name)
 
+    # ---- election hooks ----------------------------------------------------
+    def attach_elector(self, elector: Any) -> None:
+        """Wire a `repro.serve.election.Elector` in: vote/heartbeat messages
+        dispatch to it, and mutations on a non-leader host forward to the
+        current leader instead of raising (the static-fleet contract)."""
+        self.elector = elector
+
+    def leader_status(self) -> Dict[str, Any]:
+        """Who this host believes leads the fleet, and at what term."""
+        with self._meta:
+            return {"host": self.transport.host_id, "role": self.role,
+                    "leader": self.leader, "term": self.term}
+
+    def observe_term(self, term: int, leader: Optional[str] = None) -> None:
+        """Adopt a term observed from the fleet.  A higher term always wins:
+        a leader seeing one is DEPOSED (steps down to follower).  `leader`
+        names the peer asserting leadership at that term (an op/heartbeat
+        sender), or None for a bare term (a vote exchange)."""
+        me = self.transport.host_id
+        with self._meta:
+            if term < self.term:
+                return
+            if term > self.term:
+                self.term = term
+                if self.role == "leader":
+                    self.role = "follower"
+                    self.leader = None
+            if leader is not None and leader != me:
+                self.leader = leader
+                if self.role == "leader":
+                    # a same-term usurper is impossible under vote safety,
+                    # but never let two leaders coexist
+                    self.role = "follower"
+
+    def start_candidacy(self) -> int:
+        """Bump the fencing term for a fresh election round and return the
+        new term.  The candidate votes for a leader yet to be chosen, so
+        the leader pointer clears; a leader campaigning against itself
+        (possible after a quorum=1 self-flip) demotes to follower.  Keeps
+        every term transition inside this class, same as `observe_term` /
+        `become_leader`."""
+        with self._meta:
+            self.term += 1
+            if self.role == "leader":
+                self.role = "follower"
+            self.leader = None
+            return self.term
+
+    def become_leader(self, term: int) -> bool:
+        """Flip this host to leader at `term` (an election win).  Returns
+        False if a higher term was adopted in the meantime — the win is
+        stale and MUST be abandoned."""
+        with self._meta:
+            if term < self.term:
+                return False
+            self.term = term
+            self.role = "leader"
+            self.leader = self.transport.host_id
+            return True
+
+    def log_summary(self) -> Dict[str, Tuple[int, int]]:
+        """Per-name (last op term, last op seq) — the freshness fingerprint
+        a candidate sends with its vote request.  A voter only grants to a
+        candidate whose log is at least as fresh as its own on EVERY name,
+        comparing (term, seq) lexicographically, so an elected leader can
+        never rewind quorum-committed history."""
+        with self._meta:
+            return {n: (log[-1].term, log[-1].seq)
+                    for n, log in self._log.items() if log}
+
     # ---- fleet introspection ----------------------------------------------
     def applied_seq(self, name: str) -> int:
         with self._meta:
@@ -204,10 +297,13 @@ class ReplicatedRegistry:
                 pass
         return out
 
-    # ---- mutations (leader only) ------------------------------------------
+    # ---- mutations (leader only; non-leaders forward when elections are on)
     def register(self, name: str, model: Any, state: PyTree, *,
                  ensemble: Optional[int] = None, replace: bool = False) -> int:
-        self._require_leader("register")
+        if self.role != "leader":
+            return self._forward("register", name=name, model=model,
+                                 state=host_state(state), ensemble=ensemble,
+                                 replace=replace)
         st = host_state(state)
         h = state_hash(st)
         with self._mutate:
@@ -219,21 +315,23 @@ class ReplicatedRegistry:
                 op = Op(seq=self._applied.get(name, -1) + 1, kind="register",
                         name=name, version=0, state_hash=h,
                         chash=config_hash(model), ensemble=ensemble,
-                        replace=replace, model=model)
+                        replace=replace, model=model, term=self.term)
                 self._commit_meta(op, st)
             self._broadcast(op, {h: st})
             return 0
 
     def push(self, name: str, state: PyTree) -> int:
         """Append a state version fleet-wide (not live); returns its id."""
-        self._require_leader("push")
+        if self.role != "leader":
+            return self._forward("push", name=name, state=host_state(state))
         st = host_state(state)
         h = state_hash(st)
         with self._mutate:
             with self._meta:
                 version = self.local.push(name, st)
                 op = Op(seq=self._applied.get(name, -1) + 1, kind="push",
-                        name=name, version=version, state_hash=h)
+                        name=name, version=version, state_hash=h,
+                        term=self.term)
                 self._commit_meta(op, st)
             self._broadcast(op, {h: st})
             return version
@@ -245,8 +343,11 @@ class ReplicatedRegistry:
         pointer has moved anywhere.  Phase 2 (`commit`): the promote op is
         appended, applied locally, and broadcast — each ack is a host that
         has atomically flipped.  Raises `ReplicationError` if the flip
-        itself falls short of quorum (anti-entropy heals stragglers)."""
-        self._require_leader("promote")
+        itself falls short of quorum (anti-entropy heals stragglers), or if
+        a fenced (stale-term) reply reveals this leader was deposed —
+        during phase 1 that abort moves NO live pointer anywhere."""
+        if self.role != "leader":
+            return self._forward("promote", name=name, version=version)
         with self._mutate:
             with self._meta:
                 n = self.local.n_versions(name)     # raises on unknown name
@@ -254,25 +355,40 @@ class ReplicatedRegistry:
                 if not 0 <= v < n:
                     raise IndexError(f"{name!r} has no version {v}")
                 h = self._vhash.get(name, [None] * n)[v]
+                term = self.term
             # phase 1: the fleet must HOLD v before anyone flips to it
             need = self._quorum_size()
             holders = 1                             # the leader holds it
             for p in self.transport.peers():
                 try:
-                    r = self.transport.send(p, {"req": "prepare", "name": name,
-                                                "version": v, "hash": h})
-                    holders += 1 if r.get("ok") else 0
+                    r = self.transport.send(
+                        p, {"req": "prepare", "name": name, "version": v,
+                            "hash": h, "term": term,
+                            "from": self.transport.host_id})
                 except TransportError:
-                    pass
+                    continue
+                if r.get("fenced"):
+                    self._fenced(r, f"promote {name!r} v{v}",
+                                 "aborted before any flip — the fleet is "
+                                 "still uniformly on the old version")
+                holders += 1 if r.get("ok") else 0
             if holders < need:
                 raise ReplicationError(
                     f"promote {name!r} v{v}: only {holders}/{need} hosts hold "
                     f"the version — aborted before any flip (fleet still "
                     f"uniformly on the old version)")
-            # phase 2: append + flip everywhere
+            # phase 2: append + flip everywhere.  Re-check leadership under
+            # the meta lock: a heartbeat with a higher term may have deposed
+            # us while phase 1 was on the wire, and a deposed leader must
+            # not move ANY live pointer.
             with self._meta:
+                if self.role != "leader" or self.term != term:
+                    raise ReplicationError(
+                        f"promote {name!r} v{v}: deposed during prepare "
+                        f"(term {term} -> {self.term}, leader "
+                        f"{self.leader!r}) — aborted before any flip")
                 op = Op(seq=self._applied.get(name, -1) + 1, kind="promote",
-                        name=name, version=v)
+                        name=name, version=v, term=self.term)
                 self.local.promote(name, v)
                 self._commit_meta(op, None)
             flipped = 1 + self._broadcast(op, None)
@@ -286,15 +402,86 @@ class ReplicatedRegistry:
     def rollback(self, name: str) -> int:
         """Revert the fleet to the previous live version (replicated like
         any op; no quorum gate — rollback is the emergency path)."""
-        self._require_leader("rollback")
+        if self.role != "leader":
+            return self._forward("rollback", name=name)
         with self._mutate:
             with self._meta:
                 v = self.local.rollback(name)
                 op = Op(seq=self._applied.get(name, -1) + 1, kind="rollback",
-                        name=name, version=v)
+                        name=name, version=v, term=self.term)
                 self._commit_meta(op, None)
             self._broadcast(op, None)
             return v
+
+    # ---- leader re-routing -------------------------------------------------
+    _CLIENT_ERRORS = {"KeyError": KeyError, "IndexError": IndexError,
+                      "ValueError": ValueError, "RuntimeError": RuntimeError,
+                      "ReplicationError": ReplicationError}
+
+    def _forward(self, kind: str, **kw: Any) -> int:
+        """Re-route a mutation from this non-leader host to the current
+        leader (how `DRService.promote` keeps working after a failover).
+        Without an elector the static-fleet contract holds: followers are
+        read replicas and mutating one raises."""
+        if self.elector is None:
+            self._require_leader(kind)
+        with self._meta:
+            ldr = self.leader
+        if ldr is None or ldr == self.transport.host_id:
+            raise ReplicationError(
+                f"{kind} on {self.transport.host_id!r}: no known leader to "
+                f"forward to (an election may be in progress — retry)")
+        try:
+            r = self.transport.send(ldr, {"req": "client", "kind": kind,
+                                          **kw})
+        except TransportError as e:
+            raise ReplicationError(
+                f"{kind}: forward to leader {ldr!r} failed ({e}) — "
+                f"retry after the next election") from e
+        if not r.get("ok"):
+            exc = self._CLIENT_ERRORS.get(r.get("error_type"),
+                                          ReplicationError)
+            raise exc(r.get("error", f"{kind} failed on leader {ldr!r}"))
+        return r["result"]
+
+    def _handle_client(self, msg: Message) -> Message:
+        """Leader side of `_forward`: run the mutation, ship the result (or
+        the exception, by name) back to the forwarding host."""
+        if self.role != "leader":
+            with self._meta:
+                return {"ok": False, "error_type": "ReplicationError",
+                        "error": f"{self.transport.host_id!r} is not the "
+                                 f"leader (try {self.leader!r}, "
+                                 f"term {self.term})"}
+        kind = msg["kind"]
+        try:
+            if kind == "register":
+                result = self.register(msg["name"], msg["model"],
+                                       msg["state"],
+                                       ensemble=msg.get("ensemble"),
+                                       replace=msg.get("replace", False))
+            elif kind == "push":
+                result = self.push(msg["name"], msg["state"])
+            elif kind == "promote":
+                result = self.promote(msg["name"], msg.get("version"))
+            elif kind == "rollback":
+                result = self.rollback(msg["name"])
+            else:
+                return {"ok": False, "error_type": "ReplicationError",
+                        "error": f"unknown client mutation {kind!r}"}
+            return {"ok": True, "result": result}
+        except Exception as e:          # noqa: BLE001 — ship to the caller
+            return {"ok": False, "error_type": type(e).__name__,
+                    "error": str(e)}
+
+    def _fenced(self, reply: Message, what: str, consequence: str) -> None:
+        """A peer rejected our RPC as stale-term: adopt the higher term
+        (stepping down) and abort the mutation."""
+        self.observe_term(int(reply["term"]), reply.get("leader"))
+        raise ReplicationError(
+            f"{what}: fenced by term {reply['term']} (current leader "
+            f"{reply.get('leader')!r}) — this host was deposed; "
+            f"{consequence}")
 
     # ---- anti-entropy ------------------------------------------------------
     def sync(self) -> int:
@@ -303,20 +490,21 @@ class ReplicatedRegistry:
         of ops applied.  How a late joiner or healed partition converges."""
         if self.role == "leader":
             return 0
+        with self._meta:
+            leader = self.leader
+        if leader is None:
+            raise TransportError("no known leader to sync from")
         if hasattr(self.transport, "add_peer") and \
-                self.leader not in self.transport.peers():
-            raise TransportError(f"leader {self.leader!r} not in peer book")
+                leader not in self.transport.peers():
+            raise TransportError(f"leader {leader!r} not in peer book")
         with self._meta:
             have = dict(self._applied)
             hashes = list(self._states)
-        reply = self.transport.send(self.leader, {
-            "req": "pull", "have": have, "hashes": hashes})
-        payloads = reply.get("payloads", {})
-        applied = 0
-        for ops in reply.get("ops", {}).values():
-            for op in ops:
-                applied += 1 if self._apply(op, payloads) else 0
-        return applied
+            last_terms = self._last_terms()
+        reply = self.transport.send(leader, {
+            "req": "pull", "have": have, "hashes": hashes,
+            "last_terms": last_terms})
+        return self._ingest_bundle(reply)
 
     def join(self) -> int:
         """TCP fleets: announce this host's address to the leader (so
@@ -342,14 +530,91 @@ class ReplicatedRegistry:
         elif op.kind == "push":
             self._vhash.setdefault(op.name, []).append(op.state_hash)
 
-    def _apply(self, op: Op, payloads: Dict[str, PyTree]) -> bool:
-        """Idempotently apply a replicated op to the local registry.
-        Returns True if it mutated (False: already applied).  Raises
-        `ReplicationError` on a sequence gap or missing payload — the
-        caller decides whether to sync and retry."""
+    def _last_terms(self) -> Dict[str, int]:
+        """Per-name term of the LAST op held (caller holds `_meta`) — the
+        divergence fingerprint every pull/nack sends so the leader can
+        spot a deposed leader's uncommitted suffix."""
+        return {n: log[-1].term for n, log in self._log.items() if log}
+
+    def _reset_name(self, name: str) -> None:
+        """Drop this host's per-name log so a full replay from the leader
+        rebuilds it — how a deposed leader's uncommitted (diverged) suffix
+        is rewound.  The content-addressed state store survives: hashes the
+        replay needs again are never re-shipped."""
         with self._meta:
+            self._log.pop(name, None)
+            self._applied.pop(name, None)
+            self._vhash.pop(name, None)
+
+    def _ingest_bundle(self, bundle: Message) -> int:
+        """Apply a pull/catchup bundle.  Ordinary names replay their
+        missing ops straight into the live registry.  A RESET name (log
+        divergence) is replayed into a scratch registry and adopted in
+        one atomic step, so live readers never see the partially-rebuilt
+        entry (a mid-replay read would otherwise serve version 0).  A
+        reset name with NO ops at all is a phantom — a name a deposed
+        leader registered while partitioned from everyone — and its local
+        entry is dropped outright: no other host has it, and keeping it
+        would both serve a model the fleet never committed and poison the
+        vote-freshness check against every legitimate candidate."""
+        payloads = bundle.get("payloads", {})
+        ops = bundle.get("ops", {})
+        resets = set(bundle.get("reset", ()))
+        sender_term = bundle.get("term")
+        applied = 0
+        for name, missing in ops.items():
+            if name in resets:
+                self._reset_name(name)
+                shadow = ModelRegistry()
+                for op in missing:
+                    applied += 1 if self._apply(op, payloads, shadow,
+                                                sender_term) else 0
+                self.local.adopt(name, shadow)
+            else:
+                for op in missing:
+                    applied += 1 if self._apply(op, payloads,
+                                                sender_term=sender_term) \
+                        else 0
+        for name in resets - set(ops):
+            self._reset_name(name)
+            self.local.remove(name)
+        return applied
+
+    def _apply(self, op: Op, payloads: Dict[str, PyTree],
+               registry: Optional[ModelRegistry] = None,
+               sender_term: Optional[int] = None) -> bool:
+        """Idempotently apply a replicated op to the local registry (or to
+        `registry`, a reset-replay's scratch target — op-log bookkeeping
+        always lands on self).  Returns True if it mutated (False: already
+        applied).  Raises `ReplicationError` on a sequence gap, missing
+        payload, or a log divergence (same seq, different term — this host
+        holds a deposed leader's uncommitted op) — the caller decides
+        whether to sync and retry.
+
+        `sender_term` is the term of the MESSAGE that delivered the op
+        (not `op.term`, which is the op's creation term and legitimately
+        old during catch-up replay).  Checking it inside the `_meta` hold
+        makes term-check-and-apply atomic: without it, a host could pass
+        the handler's fencing gate, grant a vote to a higher-term
+        candidate on another thread, and then still ack the deposed
+        leader's op — exactly the window that loses a committed promote."""
+        target = registry if registry is not None else self.local
+        with self._meta:
+            if sender_term is not None and sender_term < self.term:
+                raise _Fenced(
+                    f"{op.kind} {op.name!r}: message term {sender_term} went "
+                    f"stale (current term {self.term})")
             applied = self._applied.get(op.name, -1)
             if op.seq <= applied:
+                log = self._log.get(op.name, [])
+                mine = log[op.seq] if op.seq < len(log) else None
+                if mine is not None and mine.term != op.term:
+                    # an idempotent skip here would silently keep the stale
+                    # op and ack — the leader must reset-replay us instead
+                    raise ReplicationError(
+                        f"log divergence for {op.name!r} at seq {op.seq}: "
+                        f"held term {mine.term} != incoming term {op.term} "
+                        f"— sync required")
                 return False                        # replay — idempotent skip
             if op.seq > applied + 1:
                 raise ReplicationError(
@@ -364,18 +629,18 @@ class ReplicatedRegistry:
                         f"missing payload {op.state_hash} for "
                         f"{op.kind} {op.name!r} — sync required")
             if op.kind == "register":
-                self.local.register(op.name, op.model, payload,
-                                    ensemble=op.ensemble, replace=True)
+                target.register(op.name, op.model, payload,
+                                ensemble=op.ensemble, replace=True)
             elif op.kind == "push":
-                got = self.local.push(op.name, payload)
+                got = target.push(op.name, payload)
                 if got != op.version:
                     raise ReplicationError(
                         f"push {op.name!r}: local version {got} != "
                         f"op version {op.version} — log divergence")
             elif op.kind == "promote":
-                self.local.promote(op.name, op.version)
+                target.promote(op.name, op.version)
             elif op.kind == "rollback":
-                self.local.rollback(op.name)
+                target.rollback(op.name)
             else:
                 raise ReplicationError(f"unknown op kind {op.kind!r}")
             self._commit_meta(op, payload)
@@ -384,57 +649,102 @@ class ReplicatedRegistry:
     def _broadcast(self, op: Op, payloads: Optional[Dict[str, PyTree]]) -> int:
         """Send one op to every peer; returns the ack count.  A peer that
         reports a gap gets one inline catch-up (sync bundle) retry; an
-        unreachable peer is simply not acked (anti-entropy later)."""
+        unreachable peer is simply not acked (anti-entropy later).  A
+        FENCED reply (the peer has seen a higher term) deposes this leader:
+        it steps down and the mutation aborts with `ReplicationError`."""
         acks = 0
-        msg = {"req": "op", "op": op, "payloads": payloads or {}}
+        msg = {"req": "op", "op": op, "payloads": payloads or {},
+               "term": op.term, "from": self.transport.host_id}
         for p in self.transport.peers():
             try:
                 r = self.transport.send(p, msg)
+                if r.get("fenced"):
+                    self._fenced(r, f"{op.kind} {op.name!r}",
+                                 "peers that already acked converge on the "
+                                 "new leader via anti-entropy")
                 if not r.get("ok") and r.get("need_sync"):
-                    self._heal_peer(p, r.get("have", {}), r.get("hashes", []))
+                    self._heal_peer(p, r.get("have", {}), r.get("hashes", []),
+                                    r.get("last_terms"))
                     r = self.transport.send(p, msg)
                 acks += 1 if r.get("ok") else 0
             except TransportError:
                 pass
         return acks
 
-    def _heal_peer(self, peer: str, have: Dict[str, int],
-                   hashes: List[str]) -> None:
+    def _heal_peer(self, peer: str, have: Dict[str, int], hashes: List[str],
+                   last_terms: Optional[Dict[str, int]] = None) -> None:
         """Push a catch-up bundle (ops past `have`, payloads not in
-        `hashes`) to a peer that nacked with a gap."""
-        bundle = self._pull_bundle(have, hashes)
-        self.transport.send(peer, {"req": "catchup", **bundle})
+        `hashes`, full reset-replays for diverged names) to a peer that
+        nacked with a gap or divergence."""
+        bundle = self._pull_bundle(have, hashes, last_terms)  # stamps term
+        self.transport.send(peer, {"req": "catchup", **bundle,
+                                   "from": self.transport.host_id})
 
-    def _pull_bundle(self, have: Dict[str, int],
-                     hashes: List[str]) -> Dict[str, Any]:
+    def _pull_bundle(self, have: Dict[str, int], hashes: List[str],
+                     last_terms: Optional[Dict[str, int]] = None,
+                     ) -> Dict[str, Any]:
         held = set(hashes)
         with self._meta:
             ops: Dict[str, List[Op]] = {}
             payloads: Dict[str, PyTree] = {}
+            reset: List[str] = []
             for name, log in self._log.items():
-                missing = [op for op in log if op.seq > have.get(name, -1)]
+                fseq = have.get(name, -1)
+                if fseq >= 0 and last_terms is not None and (
+                        fseq >= len(log)
+                        or log[fseq].term != last_terms.get(name)):
+                    # the puller's log diverged from ours (a deposed
+                    # leader's uncommitted suffix): ship the WHOLE log and
+                    # tell it to rebuild the name from scratch
+                    missing = list(log)
+                    reset.append(name)
+                else:
+                    missing = [op for op in log if op.seq > fseq]
                 if not missing:
                     continue
                 ops[name] = missing
                 for op in missing:
                     if op.state_hash is not None and op.state_hash not in held:
                         payloads[op.state_hash] = self._states[op.state_hash]
-            return {"ops": ops, "payloads": payloads}
+            if last_terms is not None:
+                # phantom names: the puller has a log for a name WE have no
+                # log for at all — a deposed leader's register that reached
+                # nobody.  Reset with no ops == drop the entry outright.
+                reset.extend(n for n, s in have.items()
+                             if s >= 0 and n not in self._log)
+            # stamp the sender's term so the puller's atomic apply-time
+            # fence is LIVE for pull replies too: without it a follower
+            # that already adopted a higher term would ingest a deposed
+            # leader's uncommitted suffix unfenced
+            return {"ops": ops, "payloads": payloads, "reset": reset,
+                    "term": self.term}
 
     # ---- incoming messages -------------------------------------------------
     def _handle(self, msg: Message) -> Message:
         req = msg.get("req")
+        if req in ("vote", "heartbeat"):
+            if self.elector is None:
+                return {"ok": False, "granted": False,
+                        "error": "no elector attached"}
+            return self.elector.handle(msg)
+        fenced = self._check_term(msg)
+        if fenced is not None:
+            return fenced
         if req == "op":
             return self._handle_op(msg)
         if req == "prepare":
             return self._handle_prepare(msg)
+        if req == "client":
+            return self._handle_client(msg)
         if req == "pull":
-            return self._pull_bundle(msg.get("have", {}), msg.get("hashes", []))
+            return self._pull_bundle(msg.get("have", {}),
+                                     msg.get("hashes", []),
+                                     msg.get("last_terms"))
         if req == "catchup":
-            payloads = msg.get("payloads", {})
-            for ops in msg.get("ops", {}).values():
-                for op in ops:
-                    self._apply(op, payloads)
+            try:
+                self._ingest_bundle(msg)
+            except _Fenced:
+                return self._fenced_reply()
             return {"ok": True}
         if req == "status":
             return self.status()
@@ -445,32 +755,91 @@ class ReplicatedRegistry:
             return {"ok": True}
         return {"ok": False, "error": f"unknown request {req!r}"}
 
+    def _check_term(self, msg: Message) -> Optional[Message]:
+        """Fencing gate for leader-originated RPCs (`op`, `prepare`,
+        `catchup`): a message from a stale term is rejected with a fenced
+        nack naming the current term and leader; a HIGHER term is adopted
+        on the spot (the sender is the leader asserting it).  Messages
+        without a term (static fleets, reads) pass untouched."""
+        term = msg.get("term")
+        if term is None or msg.get("req") not in ("op", "prepare", "catchup"):
+            return None
+        with self._meta:
+            if term < self.term:
+                return self._fenced_reply()
+        src = msg.get("from")
+        self.observe_term(term, leader=src)
+        if self.elector is not None and src is not None:
+            # a current-term op from the leader is as good as a heartbeat
+            self.elector.observe_leader(term, src)
+        return None
+
     def _handle_op(self, msg: Message) -> Message:
+        sender_term = msg.get("term")
         try:
-            self._apply(msg["op"], msg.get("payloads", {}))
+            self._apply(msg["op"], msg.get("payloads", {}),
+                        sender_term=sender_term)
             return {"ok": True}
+        except _Fenced:
+            return self._fenced_reply()
         except ReplicationError:
             # gap or missing payload: try a self-serve sync from the leader
             # (reachable on a LocalBus; on TCP the leader's retry heals us)
             try:
                 self.sync()
-                self._apply(msg["op"], msg.get("payloads", {}))
+                self._apply(msg["op"], msg.get("payloads", {}),
+                            sender_term=sender_term)
                 return {"ok": True}
+            except _Fenced:
+                return self._fenced_reply()
             except (TransportError, ReplicationError):
                 with self._meta:
                     return {"ok": False, "need_sync": True,
                             "have": dict(self._applied),
-                            "hashes": list(self._states)}
+                            "hashes": list(self._states),
+                            "last_terms": self._last_terms()}
+
+    def _fenced_reply(self) -> Message:
+        with self._meta:
+            return {"ok": False, "fenced": True, "term": self.term,
+                    "leader": self.leader}
 
     def _handle_prepare(self, msg: Message) -> Message:
         name, v, h = msg["name"], msg["version"], msg.get("hash")
-        if self._holds(name, v, h):
-            return {"ok": True}
+        if not self._holds(name, v, h):
+            try:
+                self.sync()                         # catch up, then re-check
+            except (TransportError, ReplicationError):
+                pass
+        # decide + term-recheck under ONE meta hold: a vote granted to a
+        # higher-term candidate on another thread between the handler's
+        # fencing gate and this reply must flip the answer to fenced — an
+        # ok here is a promise to the OLD leader's quorum
+        with self._meta:
+            t = msg.get("term")
+            if t is not None and t < self.term:
+                return self._fenced_reply()
+            return {"ok": self._holds(name, v, h)}
+
+    def holds_content(self, name: str, version: int, h: str) -> bool:
+        """Does the fleet's CURRENT leader hold `version` of `name` with
+        content `h`?  `DRService.promote` asks this before re-promoting a
+        version it pushed earlier: after a failover the new leader may
+        never have received that push (or hold different content under the
+        same version id), in which case the staged state must be pushed
+        afresh instead of flipping the fleet to the wrong bytes."""
+        if self.role == "leader":
+            return self._holds(name, version, h)
+        with self._meta:
+            ldr = self.leader
+        if ldr is None or ldr == self.transport.host_id:
+            return False
         try:
-            self.sync()                             # catch up, then re-check
-        except (TransportError, ReplicationError):
-            pass
-        return {"ok": self._holds(name, v, h)}
+            r = self.transport.send(ldr, {"req": "prepare", "name": name,
+                                          "version": version, "hash": h})
+        except TransportError:
+            return False
+        return bool(r.get("ok"))
 
     def _holds(self, name: str, version: int, h: Optional[str]) -> bool:
         """True iff this host holds `version` of `name` with the expected

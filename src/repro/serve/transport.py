@@ -51,9 +51,13 @@ class Transport(Protocol):
         """Other hosts currently reachable-in-principle (self excluded)."""
         ...
 
-    def send(self, dst: str, msg: Message) -> Message:
+    def send(self, dst: str, msg: Message, *,
+             timeout_s: Optional[float] = None) -> Message:
         """Deliver `msg` to `dst`, return its reply; `TransportError` on
-        failure.  Blocking, at-most-once."""
+        failure.  Blocking, at-most-once.  `timeout_s` caps THIS call
+        (None: the transport's default) — election traffic passes a cap
+        well below the heartbeat interval so one hung peer can't stall a
+        beat round into a spurious failover."""
         ...
 
     def set_handler(self, handler: Handler) -> None:
@@ -120,6 +124,10 @@ class LocalBus:
             else:
                 self._partitioned.clear()
 
+    def partitioned(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(self._partitioned)
+
     # ---- delivery ----------------------------------------------------------
     def _send(self, src: str, dst: str, msg: Message) -> Message:
         with self._lock:
@@ -152,7 +160,9 @@ class _LocalEndpoint:
     def peers(self) -> Tuple[str, ...]:
         return tuple(h for h in self.bus.hosts() if h != self.host_id)
 
-    def send(self, dst: str, msg: Message) -> Message:
+    def send(self, dst: str, msg: Message, *,
+             timeout_s: Optional[float] = None) -> Message:
+        # synchronous in-process delivery: nothing to time out
         return self.bus._send(self.host_id, dst, msg)
 
     def set_handler(self, handler: Handler) -> None:
@@ -230,17 +240,26 @@ class TCPTransport:
         self._handler = handler
 
     # ---- client side -------------------------------------------------------
-    def send(self, dst: str, msg: Message) -> Message:
+    def send(self, dst: str, msg: Message, *,
+             timeout_s: Optional[float] = None) -> Message:
         with self._lock:
             addr = self._peers.get(dst)
         if addr is None:
             raise TransportError(f"{self.host_id} -> {dst}: unknown peer")
+        budget = self.timeout_s if timeout_s is None else timeout_s
         try:
-            with socket.create_connection(addr, timeout=self.timeout_s) as s:
-                s.settimeout(self.timeout_s)
+            with socket.create_connection(addr, timeout=budget) as s:
+                s.settimeout(budget)
                 _send_frame(s, msg)
                 reply = _recv_frame(s)
-        except (OSError, EOFError, pickle.PickleError) as e:
+        except TransportError:
+            raise
+        except Exception as e:      # noqa: BLE001 — ANY dead-peer failure is
+            # a nack: connection refused, reset, timeout, a truncated frame,
+            # or unpickling a reply (which can raise arbitrary exceptions,
+            # not just PickleError).  The replication layer counts a
+            # TransportError as "unreachable toward quorum"; anything else
+            # leaking out of send() would abort a whole broadcast instead.
             raise TransportError(f"{self.host_id} -> {dst}: {e!r}") from e
         if isinstance(reply, dict) and "_transport_error" in reply:
             raise TransportError(reply["_transport_error"])
@@ -277,7 +296,17 @@ class TCPTransport:
 
     def close(self) -> None:
         self._closed = True
+        # shutdown() BEFORE close(): on Linux, close() does not wake a
+        # thread blocked in accept() — the listener keeps accepting until
+        # one more connection arrives, so a "stopped" host would answer
+        # exactly one more request (e.g. falsely confirm a prepare).
+        # shutdown() interrupts the blocked accept immediately.
+        try:
+            self._srv.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._srv.close()
         except OSError:
             pass
+        self._thread.join(timeout=5.0)

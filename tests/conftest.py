@@ -1,0 +1,21 @@
+"""Shared test configuration.
+
+`--seed N` parameterizes the chaos tests (random partition/heal/kill
+schedules in `tests/test_election.py`): the CI `chaos` job sweeps the
+suite across 20 distinct seeds, while a bare run uses seed 0.  Every
+chaos test derives ALL its randomness from this one seed, so any failing
+seed replays exactly with `pytest -m chaos --seed N`.
+"""
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--seed", type=int, default=0,
+        help="master seed for the chaos tests (CI sweeps 0..19)")
+
+
+@pytest.fixture
+def chaos_seed(request) -> int:
+    return request.config.getoption("--seed")

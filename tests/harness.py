@@ -17,6 +17,11 @@ happen:
 `FleetHarness` extends the same determinism to a replicated fleet: N
 hosts on one `LocalBus` (synchronous in-thread delivery), each with its
 own `DRService` over a `ReplicatedRegistry`, sharing one `VirtualClock`.
+With `elect=True` each host also gets a loopless `Elector`, and
+`kill_leader()` / `heal()` / `pump_elections()` drive failovers by
+advancing the shared clock to each elector's next deadline — an entire
+election (timeouts, vote rounds, fencing heartbeats) is a deterministic
+sequence of synchronous calls.
 
 Tests in this repo never call `time.sleep`; if you need time to pass,
 advance the clock.
@@ -29,14 +34,22 @@ from typing import Any, Dict, Hashable, List, Optional
 import jax
 
 from repro.dr import DRModel, EASIStage, RPStage
-from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, LocalBus,
-                         ReplicatedRegistry, VirtualClock)
+from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, Elector,
+                         LocalBus, ReplicatedRegistry, VirtualClock)
 
 
 def small_model(m: int = 32, p: int = 16, n: int = 8, block: int = 4) -> DRModel:
     """The standard tiny RP→EASI cascade the serving tests use."""
     return DRModel(stages=(RPStage(m, p), EASIStage.rotation(p, n, mu=1e-3)),
                    block_size=block)
+
+
+def model_states(n: int, model: Optional[DRModel] = None, start: int = 0):
+    """`(model, [state0, ..])` — n independently-seeded states of the
+    standard small model; the fixture every fleet test builds on."""
+    model = model if model is not None else small_model()
+    return model, [model.init(jax.random.PRNGKey(start + i))
+                   for i in range(n)]
 
 
 class ServingHarness:
@@ -119,9 +132,25 @@ class FleetHarness:
         fleet.register("m", model, state)       # fleet-wide v0
         v = fleet.push_promote("m", new_state)  # two-phase atomic flip
         assert fleet.live_versions("m") == [v, v, v]
+
+    With `elect=True` every host also gets an `Elector` (loopless —
+    pumped, never threaded) on the shared `VirtualClock`:
+
+        fleet = FleetHarness(n_hosts=3, elect=True)
+        fleet.register("m", model, state)
+        dead = fleet.kill_leader()              # partition the leader
+        new = fleet.pump_elections()            # deterministic failover
+        fleet.heal(dead)                        # old leader gets fenced
+
+    `election_timeouts` optionally pins each host's timeout (a list of
+    ms values, index = host) so a test chooses the winner; by default
+    each elector draws randomized timeouts from `seed + host index`.
     """
 
     def __init__(self, n_hosts: int = 3, *, quorum: Optional[int] = None,
+                 elect: bool = False, seed: int = 0,
+                 election_timeouts: Optional[List[float]] = None,
+                 heartbeat_interval_ms: float = 50.0,
                  buckets: Optional[BucketPolicy] = None, **service_kw: Any):
         if n_hosts < 1:
             raise ValueError("need at least the leader host")
@@ -134,6 +163,18 @@ class FleetHarness:
             self.registries.append(ReplicatedRegistry(
                 self.bus.attach(f"h{i}"), role="follower", leader="h0",
                 quorum=quorum))
+        self.electors: List[Elector] = []
+        if elect:
+            for i, reg in enumerate(self.registries):
+                if election_timeouts is not None:
+                    t = float(election_timeouts[i])
+                    rng_range = (t, t)
+                else:
+                    rng_range = (150.0, 300.0)
+                self.electors.append(Elector(
+                    reg, clock=self.clock, seed=seed * 1009 + i,
+                    election_timeout_ms=rng_range,
+                    heartbeat_interval_ms=heartbeat_interval_ms))
         kw = dict(service_kw)
         kw.setdefault("buckets", buckets if buckets is not None
                       else BucketPolicy(min_bucket=4, max_bucket=32))
@@ -141,7 +182,7 @@ class FleetHarness:
             DRService(registry=reg, clock=self.clock, **kw)
             for reg in self.registries]
 
-    # ---- fleet operations (leader) ----------------------------------------
+    # ---- fleet operations (routed to whoever currently leads) --------------
     def register(self, name: str, model: DRModel, state: Any, **kw: Any) -> int:
         return self.leader.register(name, model, state, **kw)
 
@@ -160,6 +201,77 @@ class FleetHarness:
         self.registries.append(reg)
         self.services.append(svc)
         return svc
+
+    # ---- election driving (elect=True) -------------------------------------
+    def host_ids(self) -> List[str]:
+        return [r.transport.host_id for r in self.registries]
+
+    def registry_for(self, host_id: str) -> ReplicatedRegistry:
+        return self.registries[self.host_ids().index(host_id)]
+
+    def service_for(self, host_id: str) -> DRService:
+        return self.services[self.host_ids().index(host_id)]
+
+    def reachable(self) -> List[ReplicatedRegistry]:
+        cut = set(self.bus.partitioned())
+        return [r for r in self.registries if r.transport.host_id not in cut]
+
+    def current_leader(self) -> Optional[ReplicatedRegistry]:
+        """The registry acting as leader among REACHABLE hosts (a
+        partitioned old leader may still believe it leads — at a lower,
+        fenced term)."""
+        leaders = [r for r in self.reachable() if r.role == "leader"]
+        return leaders[0] if len(leaders) == 1 else None
+
+    def kill_leader(self) -> str:
+        """Partition whichever host currently leads; returns its id (pass
+        to `heal` to bring it back)."""
+        leaders = [r for r in self.reachable() if r.role == "leader"]
+        assert leaders, "no reachable leader to kill"
+        dead = leaders[0].transport.host_id
+        self.bus.partition(dead)
+        return dead
+
+    def heal(self, *host_ids: str) -> None:
+        """Heal partitions (all of them when called with no args)."""
+        self.bus.heal(*host_ids)
+
+    def pump_elections(self, max_ms: float = 60_000.0) -> str:
+        """Deterministically drive elections to convergence: repeatedly
+        advance the shared `VirtualClock` to the earliest reachable
+        elector deadline and `poll()` every reachable elector (host
+        order), until exactly one reachable leader exists and every
+        reachable host agrees on it (same leader id, same term).  Returns
+        the winning host id.  Zero `time.sleep`, zero real time."""
+        assert self.electors, "FleetHarness(elect=True) required"
+        spent = 0.0
+        while True:
+            winner = self._agreed_leader()
+            if winner is not None:
+                return winner
+            if spent >= max_ms:
+                raise AssertionError(
+                    f"no agreed leader within {max_ms} virtual ms: "
+                    f"{[e.status() for e in self.electors]}")
+            cut = set(self.bus.partitioned())
+            live = [e for e in self.electors if e.host_id not in cut]
+            step = max(0.0, min(e.deadline_ms() for e in live)
+                       - self.clock.now()) + 0.001
+            self.clock.advance(step)
+            spent += step
+            for e in live:
+                e.poll()
+
+    def _agreed_leader(self) -> Optional[str]:
+        regs = self.reachable()
+        leaders = [r for r in regs if r.role == "leader"]
+        if len(leaders) != 1:
+            return None
+        lead = leaders[0]
+        lid, lterm = lead.transport.host_id, lead.term
+        if all(r.leader == lid and r.term == lterm for r in regs):
+            return lid
+        return None
 
     # ---- fleet observation -------------------------------------------------
     def live_versions(self, name: str) -> List[Optional[int]]:

@@ -18,16 +18,11 @@ from repro.serve import (DRService, LocalBus, ReplicatedRegistry,
                          ReplicationError, TransportError)
 from repro.serve.replication import Op, host_state, state_hash
 
-from harness import FleetHarness, small_model
+from harness import FleetHarness, model_states as _states, small_model
 
 jax.config.update("jax_enable_x64", False)
 
 pytestmark = pytest.mark.replication
-
-
-def _states(n, model=None, start=0):
-    model = model if model is not None else small_model()
-    return model, [model.init(jax.random.PRNGKey(start + i)) for i in range(n)]
 
 
 def _x(rows, seed=0, m=32):
@@ -400,6 +395,54 @@ class TestFleetServing:
         # rollback is fleet-wide too
         leader_svc.rollback("m")
         assert fleet.live_versions("m") == [0, 0, 0]
+
+
+class TestTCPDeadPeer:
+    def test_stopped_member_counts_as_unreachable_nack(self):
+        """Satellite bugfix regression: a fleet member that STOPPED (its
+        transport closed) must behave exactly like a timeout nack — every
+        failure mode of talking to it surfaces as `TransportError` inside
+        broadcast/prepare, counting as unreachable toward quorum, never
+        raising out of `promote`.  Before the fix, close() left the
+        listener's blocked accept() live, so a stopped host would serve
+        exactly one more request (e.g. falsely confirm a prepare)."""
+        from repro.serve import TCPTransport
+
+        t0 = TCPTransport("h0")
+        t1 = TCPTransport("h1")
+        t2 = TCPTransport("h2")
+        transports = [t0, t1, t2]
+        for t in transports:
+            for u in transports:
+                if t is not u:
+                    t.add_peer(u.host_id, u.address)
+        try:
+            leader = ReplicatedRegistry(t0, role="leader")
+            f1 = ReplicatedRegistry(t1, role="follower", leader="h0")
+            f2 = ReplicatedRegistry(t2, role="follower", leader="h0")
+            model, (s0, s1) = _states(2)
+            leader.register("m", model, s0)
+            assert f1.get("m").version == 0 and f2.get("m").version == 0
+
+            served_before_stop = f2.applied_seq("m")
+            t2.close()                      # h2 STOPS — mid-fleet, for good
+
+            # push + two-phase promote must succeed on the 2/3 quorum with
+            # the dead socket counted as a plain unreachable nack
+            v = leader.push("m", s1)
+            assert leader.promote("m", v) == v
+            assert leader.get("m").version == v
+            assert f1.get("m").version == v
+            # the stopped host served NOTHING after close (the old bug:
+            # its blocked accept() answered one more request)
+            assert f2.applied_seq("m") == served_before_stop
+            # and the leader's probe just omits it
+            fs = leader.fleet_status()
+            assert set(fs) == {"h0", "h1"}
+            assert all(s["live"]["m"] == v for s in fs.values())
+        finally:
+            for t in transports:
+                t.close()
 
 
 TCP_FLEET_SCRIPT = r'''
