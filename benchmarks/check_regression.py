@@ -13,6 +13,12 @@ scheduler wakeups and swings 10x with CPU contention (its behavior is
 asserted by `--smoke` instead), while pow2 p99, flip_ms, and
 failover_ms stay within ~2x under a fully loaded host.
 
+Measured rows/metrics with NO baseline entry are printed as
+"new row, no gate" / "new metric, no gate" — informational, never a
+failure and never silently dropped, so a freshly added benchmark row is
+visible on its first CI run and gating it later is just a baseline.json
+entry.
+
 Run: python benchmarks/check_regression.py measured.json \
          benchmarks/baseline.json [--factor 2.0]
 Exit code 1 on any regression; prints a comparison table either way.
@@ -62,6 +68,22 @@ def main() -> int:
                 failures.append(
                     f"{name}.{metric} = {got:.2f} > {args.factor:g}x "
                     f"baseline {base:.2f}")
+    # rows/metrics measured but absent from the baseline are REPORTED,
+    # never gated and never silently dropped: a freshly added benchmark
+    # row shows up here on its first CI run, and committing a baseline
+    # entry for it later turns the gate on — no ordering dance between
+    # "add the row" and "hand-edit baseline.json".
+    for name, row in sorted(measured.items()):
+        gated = baseline.get(name)
+        new_metrics = sorted(
+            k for k, v in row.items()
+            if k != "name" and isinstance(v, (int, float))
+            and not isinstance(v, bool)
+            and (gated is None or k not in gated))
+        label = "new row, no gate" if gated is None else "new metric, no gate"
+        for metric in new_metrics:
+            print(f"{name:<40} {metric:<14} {float(row[metric]):>12.2f} "
+                  f"{'-':>12} {'-':>12}  {label}")
     if failures:
         print("\nregression gate FAILED:", file=sys.stderr)
         for f_ in failures:

@@ -1,3 +1,3 @@
-from repro.checkpoint.manager import CheckpointManager, config_hash
+from repro.checkpoint.manager import CheckpointManager, config_hash, leaf_hash
 
-__all__ = ["CheckpointManager", "config_hash"]
+__all__ = ["CheckpointManager", "config_hash", "leaf_hash"]

@@ -18,7 +18,12 @@ Guarantees:
     every leaf out for the *new* mesh.  (At >10B params production would
     switch to per-shard OCDBT-style files; the manager API is unchanged.)
   * corruption quarantine — unreadable checkpoints are renamed to
-    `*.corrupt` and restore falls back to the previous step.
+    `*.corrupt` and restore falls back to the previous step.  Each leaf's
+    sha256 (content: dtype, shape, raw bytes) is recorded in the manifest
+    and re-verified on restore, so SILENTLY corrupt leaf bytes (a flipped
+    bit that still np.loads fine) quarantine-and-fall-back the same way
+    instead of restoring garbage.  Manifests written before the hash
+    existed restore without verification.
 """
 
 from __future__ import annotations
@@ -39,6 +44,18 @@ PyTree = Any
 
 def config_hash(obj: Any) -> str:
     return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
+
+
+def leaf_hash(arr: np.ndarray) -> str:
+    """Content hash of one checkpoint leaf: dtype, shape, raw bytes —
+    computed over the array (not the file), so save-side and restore-side
+    hash exactly what the training loop will consume."""
+    a = np.ascontiguousarray(arr)
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(repr(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
 
 
 class CheckpointManager:
@@ -91,7 +108,7 @@ class CheckpointManager:
                 np.save(os.path.join(tmp, fn), arr)
                 manifest["leaves"].append(
                     {"path": path, "file": fn, "shape": list(arr.shape),
-                     "dtype": str(arr.dtype)})
+                     "dtype": str(arr.dtype), "sha256": leaf_hash(arr)})
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
                 f.flush()
@@ -151,6 +168,11 @@ class CheckpointManager:
             expect = tuple(getattr(leaf, "shape", arr.shape))
             if tuple(arr.shape) != expect:
                 raise ValueError(f"shape mismatch for {path}: {arr.shape} vs {expect}")
+            want = entry.get("sha256")      # absent in pre-hash manifests
+            if want is not None and leaf_hash(arr) != want:
+                raise ValueError(
+                    f"checksum mismatch for {path}: leaf bytes corrupt "
+                    f"on disk — quarantining this checkpoint")
             if sh_flat is not None and sh_flat[i] is not None:
                 out.append(jax.device_put(arr, sh_flat[i]))
             else:

@@ -9,14 +9,19 @@ deadline, all time through the injectable `repro.serve.clock.Clock`).
 registries (op log + two-phase atomic promote) over a
 `repro.serve.transport.Transport` (`LocalBus` in tests, `TCPTransport`
 for multi-process fleets) and plugs into the engine via
-`DRService(registry=...)`.  `dr_transform` and the prefill/decode
+`DRService(registry=...)`.  `repro.serve.durability` makes each host
+crash-safe (checksummed WAL + content-addressed blobs + compacted
+snapshots; `ReplicatedRegistry(data_dir=...)` or the single-host
+`DRService(data_dir=...)` hook).  `dr_transform` and the prefill/decode
 factories remain as thin adapters over the same bounded compile cache
 for one-shot callers.
 """
 
-from repro.serve import (batching, clock, dr_serve, election, engine,
-                         registry, replication, scheduler, serve_step, slo,
-                         transport)
+from repro.serve import (batching, clock, dr_serve, durability, election,
+                         engine, registry, replication, scheduler,
+                         serve_step, slo, transport)
+from repro.serve.durability import (BlobStore, CorruptBlobError,
+                                    DurableStore, WriteAheadLog)
 from repro.serve.batching import (BoundedCompileCache, BucketPolicy,
                                   MicroBatcher, QueueFull, Ticket)
 from repro.serve.clock import Clock, MonotonicClock, VirtualClock
@@ -34,7 +39,9 @@ from repro.serve.transport import (LocalBus, TCPTransport, Transport,
 __all__ = [
     "engine", "registry", "batching", "serve_step", "dr_serve",
     "scheduler", "clock", "slo", "replication", "transport", "election",
+    "durability",
     "Elector",
+    "DurableStore", "WriteAheadLog", "BlobStore", "CorruptBlobError",
     "DRService", "ModelRegistry", "DeadlineScheduler", "SchedulerClosed",
     "BucketPolicy", "BoundedCompileCache", "MicroBatcher", "QueueFull",
     "Ticket", "Clock", "MonotonicClock", "VirtualClock",

@@ -94,7 +94,10 @@ class Elector:
         # two threaded electors messaging each other cannot deadlock.
         self._lock = threading.RLock()
         self.state = "leader" if registry.role == "leader" else "follower"
-        self._voted: Dict[int, str] = {}        # term -> candidate granted
+        # term -> candidate granted.  Seeded from the registry's persisted
+        # vote map (durable hosts): a vote granted before a crash is a
+        # vote granted after the restart — never a second grant per term.
+        self._voted: Dict[int, str] = dict(registry.recovered_votes())
         self._last_heartbeat = self.clock.now()
         self._last_beat_sent = float("-inf")
         self._timeout_ms = self._new_timeout()
@@ -194,6 +197,10 @@ class Elector:
             self._last_heartbeat = now          # restart the election timer
             self._timeout_ms = self._new_timeout()
             self.elections_started += 1
+        # persist the self-vote BEFORE asking anyone else for theirs: a
+        # candidate that crashes mid-round must not wake up and grant its
+        # own term's vote to a rival (the self-vote already counted)
+        self.reg.persist_vote(new_term, self.host_id)
         summary = self.reg.log_summary()
         peers = self.transport.peers()
         need = (1 + len(peers)) // 2 + 1
@@ -253,6 +260,10 @@ class Elector:
                 self._voted[term] = cand
                 # granting resets the timer: give the winner time to beat
                 self._last_heartbeat = self.clock.now()
+        if grant:
+            # fsync the grant BEFORE the reply leaves this host: once the
+            # candidate counts this vote, no restart may re-grant the term
+            self.reg.persist_vote(term, cand)
         return {"granted": grant, "term": self.reg.term}
 
     def _on_heartbeat(self, msg: Message) -> Message:

@@ -50,8 +50,9 @@ from repro.serve.batching import (BoundedCompileCache, BucketPolicy,
                                   MicroBatcher, Ticket)
 from repro.serve.clock import Clock, MonotonicClock
 from repro.serve.registry import ModelRegistry, Snapshot
-from repro.serve.replication import state_hash
+from repro.serve.replication import ReplicatedRegistry, state_hash
 from repro.serve.slo import SLOTracker
+from repro.serve.transport import LocalBus
 
 PyTree = Any
 
@@ -90,7 +91,8 @@ class DRService:
                  max_queue: int = 4096,
                  update_fraction: float = 1.0,
                  clock: Optional[Clock] = None,
-                 registry: Optional[Any] = None):
+                 registry: Optional[Any] = None,
+                 data_dir: Optional[str] = None):
         if not 0.0 <= update_fraction <= 1.0:
             raise ValueError("update_fraction must be in [0, 1]")
         self.mesh = mesh
@@ -98,7 +100,21 @@ class DRService:
         self.clock: Clock = clock if clock is not None else MonotonicClock()
         # `registry` hook: anything with the ModelRegistry surface — e.g. a
         # `repro.serve.replication.ReplicatedRegistry` so this service's
-        # register/push/promote go fleet-wide (get() semantics unchanged)
+        # register/push/promote go fleet-wide (get() semantics unchanged).
+        # `data_dir` is the single-host durability hook: the service runs
+        # over a solo durable ReplicatedRegistry (quorum=1, private bus),
+        # so every register/push/promote is WAL'd + snapshotted and a
+        # restart with the same data_dir restores the whole registry.
+        # Fleet hosts configure data_dir on their own ReplicatedRegistry
+        # instead and pass it via `registry=` — both at once is ambiguous.
+        if data_dir is not None:
+            if registry is not None:
+                raise ValueError(
+                    "pass data_dir OR registry, not both — a fleet host "
+                    "configures data_dir on its ReplicatedRegistry")
+            registry = ReplicatedRegistry(
+                LocalBus().attach("solo"), role="leader", quorum=1,
+                data_dir=data_dir)
         self.registry = registry if registry is not None else ModelRegistry()
         self.cache = BoundedCompileCache(compile_cache_size)
         self.batcher = MicroBatcher(max_queue=max_queue)

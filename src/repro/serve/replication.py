@@ -47,16 +47,21 @@ a non-leader host forward to whoever currently leads.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 
-import jax
-import numpy as np
-
 from repro.checkpoint import config_hash
+from repro.serve.durability import (CorruptBlobError, DurableStore,
+                                    host_state, state_hash)
 from repro.serve.registry import ModelRegistry, Snapshot
 from repro.serve.transport import Message, Transport, TransportError
+
+# content addressing (`host_state` / `state_hash`) lives in
+# `repro.serve.durability` — the storage layer owns it — and is
+# re-exported here because replication is where callers historically
+# imported it from.
+__all__ = ["Op", "ReplicatedRegistry", "ReplicationError",
+           "host_state", "state_hash"]
 
 PyTree = Any
 
@@ -68,30 +73,6 @@ class ReplicationError(RuntimeError):
 class _Fenced(ReplicationError):
     """Internal: a message's term went stale between the handler's gate
     and the apply — reply with a fenced nack, not a sync request."""
-
-
-# ---------------------------------------------------------------------------
-# content addressing
-# ---------------------------------------------------------------------------
-
-def host_state(state: PyTree) -> PyTree:
-    """Device → host copy of a state pytree (numpy leaves).  Replication
-    always ships host arrays: they pickle portably and hash stably."""
-    return jax.tree.map(lambda a: np.asarray(jax.device_get(a)), state)
-
-
-def state_hash(state: PyTree) -> str:
-    """Content address of a state pytree: keypaths, dtypes, shapes, bytes.
-    Stable across processes and across jax/numpy leaf types."""
-    h = hashlib.sha256()
-    flat, _ = jax.tree_util.tree_flatten_with_path(state)
-    for kp, leaf in flat:
-        a = np.ascontiguousarray(np.asarray(jax.device_get(leaf)))
-        h.update(jax.tree_util.keystr(kp).encode())
-        h.update(str(a.dtype).encode())
-        h.update(repr(a.shape).encode())
-        h.update(a.tobytes())
-    return h.hexdigest()[:16]
 
 
 # ---------------------------------------------------------------------------
@@ -142,11 +123,22 @@ class ReplicatedRegistry:
     `quorum` is the number of hosts (leader included) that must hold a
     version before `promote` flips it live fleet-wide; `None` means a
     majority of the currently-attached fleet, evaluated per call.
+
+    `data_dir` turns on durability (`repro.serve.durability`): every
+    committed op, term bump, and vote grant is WAL'd + fsync'd before the
+    fleet sees an ack, state payloads land in a content-addressed blob
+    store, and construction BOOTSTRAPS from disk — restore the newest
+    snapshot, replay the WAL suffix (torn tails truncated, never
+    replayed), re-adopt the persisted election term and voted-for map —
+    before the transport handler goes live, then `sync_on_start` /
+    `join()` heals anything newer from the fleet via the ordinary
+    anti-entropy path.
     """
 
     def __init__(self, transport: Transport, *, role: str = "follower",
                  leader: Optional[str] = None, quorum: Optional[int] = None,
-                 sync_on_start: bool = True):
+                 sync_on_start: bool = True, data_dir: Optional[str] = None,
+                 fsync: bool = True, compact_every: int = 256):
         if role not in ("leader", "follower"):
             raise ValueError(f"role must be leader|follower, got {role!r}")
         if role == "follower" and leader is None:
@@ -175,6 +167,17 @@ class ReplicatedRegistry:
         self._applied: Dict[str, int] = {}          # name -> last applied seq
         self._states: Dict[str, PyTree] = {}        # content hash -> state
         self._vhash: Dict[str, List[str]] = {}      # name -> version -> hash
+        # durability: `_voted` is the persisted term->candidate vote map
+        # (the elector reads it back on attach so a restarted host never
+        # double-votes); `_recovering` suppresses WAL re-writes while the
+        # recovery replay runs ops through the normal `_apply` path.
+        self.durable: Optional[DurableStore] = None
+        self._voted: Dict[int, str] = {}
+        self._recovering = False
+        if data_dir is not None:
+            self.durable = DurableStore(data_dir, fsync=fsync,
+                                        compact_every=compact_every)
+            self._bootstrap()
         transport.set_handler(self._handle)
         if role == "follower" and sync_on_start:
             try:
@@ -222,6 +225,7 @@ class ReplicatedRegistry:
                 return
             if term > self.term:
                 self.term = term
+                self._persist_term()
                 if self.role == "leader":
                     self.role = "follower"
                     self.leader = None
@@ -241,6 +245,7 @@ class ReplicatedRegistry:
         `become_leader`."""
         with self._meta:
             self.term += 1
+            self._persist_term()
             if self.role == "leader":
                 self.role = "follower"
             self.leader = None
@@ -253,7 +258,9 @@ class ReplicatedRegistry:
         with self._meta:
             if term < self.term:
                 return False
-            self.term = term
+            if term > self.term:
+                self.term = term
+                self._persist_term()
             self.role = "leader"
             self.leader = self.transport.host_id
             return True
@@ -267,6 +274,76 @@ class ReplicatedRegistry:
         with self._meta:
             return {n: (log[-1].term, log[-1].seq)
                     for n, log in self._log.items() if log}
+
+    # ---- durability --------------------------------------------------------
+    def _bootstrap(self) -> None:
+        """Crash recovery: replay the (snapshot ∘ WAL) op history through
+        the normal `_apply` path — so recovery and replication can never
+        disagree about what an op does — and re-adopt the persisted
+        election term + voted-for map.  An op whose payload blob is
+        missing or corrupt ends that name's replay early (the suffix is
+        treated like ops this host never received; `join()`'s
+        anti-entropy re-pulls it from the fleet)."""
+        rec = self.durable.recover()
+        self._voted = dict(rec.voted)
+        self.term = max(self.term, rec.term)
+        self._recovering = True
+        try:
+            for name, ops in rec.ops.items():
+                for op in ops:
+                    payloads: Dict[str, PyTree] = {}
+                    if op.state_hash is not None and \
+                            op.state_hash not in self._states:
+                        try:
+                            payloads[op.state_hash] = \
+                                self.durable.blobs.get(op.state_hash)
+                        except (KeyError, CorruptBlobError):
+                            break
+                    try:
+                        self._apply(op, payloads)
+                    except ReplicationError:
+                        break           # local divergence: let sync() heal
+        finally:
+            self._recovering = False
+
+    def _persist_term(self) -> None:
+        """WAL the current term (caller holds `_meta`; no-op when not
+        durable or during recovery replay)."""
+        if self.durable is not None and not self._recovering:
+            self.durable.log_term(self.term)
+
+    def persist_vote(self, term: int, candidate: str) -> None:
+        """Record that this host's term-`term` vote went to `candidate` —
+        fsync'd BEFORE the grant is answered, so a restarted host can
+        never hand the same term's vote to a second candidate (the
+        double-vote that elects two leaders at one term)."""
+        with self._meta:
+            self._voted[int(term)] = candidate
+            if self.durable is not None and not self._recovering:
+                self.durable.log_vote(int(term), candidate)
+
+    def recovered_votes(self) -> Dict[int, str]:
+        """The persisted term->candidate vote map (empty when not durable
+        or never voted) — the elector seeds its grant table from this."""
+        with self._meta:
+            return dict(self._voted)
+
+    def compact(self) -> None:
+        """Fold the WAL into a fresh snapshot now (also triggered
+        automatically every `compact_every` WAL appends).  No-op without
+        `data_dir`."""
+        if self.durable is None:
+            return
+        with self._meta:
+            self.durable.compact(self._durable_dump())
+
+    def _durable_dump(self) -> Dict[str, Any]:
+        """Everything a snapshot must hold (caller holds `_meta`)."""
+        return {"ops": {n: list(log) for n, log in self._log.items()},
+                "term": self.term, "voted": dict(self._voted)}
+
+    def durability_stats(self) -> Optional[Dict[str, Any]]:
+        return None if self.durable is None else self.durable.stats()
 
     # ---- fleet introspection ----------------------------------------------
     def applied_seq(self, name: str) -> int:
@@ -520,7 +597,9 @@ class ReplicatedRegistry:
     # ---- internals: apply / log -------------------------------------------
     def _commit_meta(self, op: Op, payload: Optional[PyTree]) -> None:
         """Record an op already applied to the local registry (caller holds
-        `_meta`): log, applied seq, content store, version->hash map."""
+        `_meta`): log, applied seq, content store, version->hash map — and,
+        on a durable host, blob + WAL (payload before op record, so a
+        recovered WAL never references a blob the crash beat to disk)."""
         self._log.setdefault(op.name, []).append(op)
         self._applied[op.name] = op.seq
         if op.state_hash is not None and payload is not None:
@@ -529,6 +608,12 @@ class ReplicatedRegistry:
             self._vhash[op.name] = [op.state_hash]
         elif op.kind == "push":
             self._vhash.setdefault(op.name, []).append(op.state_hash)
+        if self.durable is not None and not self._recovering:
+            if op.state_hash is not None and payload is not None:
+                self.durable.blobs.put(op.state_hash, payload)
+            self.durable.log_op(op)
+            if self.durable.should_compact():
+                self.durable.compact(self._durable_dump())
 
     def _last_terms(self) -> Dict[str, int]:
         """Per-name term of the LAST op held (caller holds `_meta`) — the
@@ -545,6 +630,8 @@ class ReplicatedRegistry:
             self._log.pop(name, None)
             self._applied.pop(name, None)
             self._vhash.pop(name, None)
+            if self.durable is not None and not self._recovering:
+                self.durable.log_reset(name)
 
     def _ingest_bundle(self, bundle: Message) -> int:
         """Apply a pull/catchup bundle.  Ordinary names replay their
@@ -868,3 +955,5 @@ class ReplicatedRegistry:
 
     def close(self) -> None:
         self.transport.close()
+        if self.durable is not None:
+            self.durable.close()

@@ -29,6 +29,8 @@ advance the clock.
 
 from __future__ import annotations
 
+import os
+import tempfile
 from typing import Any, Dict, Hashable, List, Optional
 
 import jax
@@ -145,42 +147,75 @@ class FleetHarness:
     `election_timeouts` optionally pins each host's timeout (a list of
     ms values, index = host) so a test chooses the winner; by default
     each elector draws randomized timeouts from `seed + host index`.
+
+    With `durable=True` every host gets a `data_dir` under `data_root`
+    (a fresh temp dir unless given — pass pytest's `tmp_path`): ops,
+    terms, and votes are WAL'd through `repro.serve.durability`, and the
+    harness grows crash helpers:
+
+        fleet.crash_host("h1")          # kill -9: drop in-memory state
+        fleet.inject_torn_tail("h1")    # garbage after the committed WAL
+        fleet.restart_host("h1")        # bootstrap from disk, join fleet
     """
 
     def __init__(self, n_hosts: int = 3, *, quorum: Optional[int] = None,
                  elect: bool = False, seed: int = 0,
                  election_timeouts: Optional[List[float]] = None,
                  heartbeat_interval_ms: float = 50.0,
-                 buckets: Optional[BucketPolicy] = None, **service_kw: Any):
+                 buckets: Optional[BucketPolicy] = None,
+                 durable: bool = False, data_root: Optional[str] = None,
+                 fsync: bool = True, compact_every: int = 256,
+                 **service_kw: Any):
         if n_hosts < 1:
             raise ValueError("need at least the leader host")
         self.clock = VirtualClock()
         self.bus = LocalBus()
+        self.durable = durable
+        if durable and data_root is None:
+            data_root = tempfile.mkdtemp(prefix="fleet-durable-")
+        self.data_root = str(data_root) if data_root is not None else None
+        self._fsync = fsync
+        self._compact_every = compact_every
+        self._quorum = quorum
+        self._elect = elect
+        self._seed = seed
+        self._election_timeouts = election_timeouts
+        self._heartbeat_ms = heartbeat_interval_ms
         self.leader = ReplicatedRegistry(self.bus.attach("h0"), role="leader",
-                                         quorum=quorum)
+                                         quorum=quorum,
+                                         **self._durable_kw("h0"))
         self.registries: List[ReplicatedRegistry] = [self.leader]
         for i in range(1, n_hosts):
             self.registries.append(ReplicatedRegistry(
                 self.bus.attach(f"h{i}"), role="follower", leader="h0",
-                quorum=quorum))
+                quorum=quorum, **self._durable_kw(f"h{i}")))
         self.electors: List[Elector] = []
         if elect:
             for i, reg in enumerate(self.registries):
-                if election_timeouts is not None:
-                    t = float(election_timeouts[i])
-                    rng_range = (t, t)
-                else:
-                    rng_range = (150.0, 300.0)
-                self.electors.append(Elector(
-                    reg, clock=self.clock, seed=seed * 1009 + i,
-                    election_timeout_ms=rng_range,
-                    heartbeat_interval_ms=heartbeat_interval_ms))
+                self.electors.append(self._make_elector(reg, i))
         kw = dict(service_kw)
         kw.setdefault("buckets", buckets if buckets is not None
                       else BucketPolicy(min_bucket=4, max_bucket=32))
+        self._service_kw = kw
         self.services: List[DRService] = [
             DRService(registry=reg, clock=self.clock, **kw)
             for reg in self.registries]
+
+    def _durable_kw(self, host_id: str) -> Dict[str, Any]:
+        if not self.durable:
+            return {}
+        return {"data_dir": os.path.join(self.data_root, host_id),
+                "fsync": self._fsync, "compact_every": self._compact_every}
+
+    def _make_elector(self, reg: ReplicatedRegistry, index: int) -> Elector:
+        if self._election_timeouts is not None:
+            t = float(self._election_timeouts[index])
+            rng_range = (t, t)
+        else:
+            rng_range = (150.0, 300.0)
+        return Elector(reg, clock=self.clock, seed=self._seed * 1009 + index,
+                       election_timeout_ms=rng_range,
+                       heartbeat_interval_ms=self._heartbeat_ms)
 
     # ---- fleet operations (routed to whoever currently leads) --------------
     def register(self, name: str, model: DRModel, state: Any, **kw: Any) -> int:
@@ -194,13 +229,68 @@ class FleetHarness:
         """Attach a late host: it syncs from the leader on construction
         (anti-entropy) and gets its own serving engine."""
         reg = ReplicatedRegistry(self.bus.attach(host_id), role="follower",
-                                 leader="h0")
+                                 leader="h0", **self._durable_kw(host_id))
         kw = dict(service_kw)
         kw.setdefault("buckets", self.services[0].buckets)
         svc = DRService(registry=reg, clock=self.clock, **kw)
         self.registries.append(reg)
         self.services.append(svc)
         return svc
+
+    # ---- crash / restart (durable=True) ------------------------------------
+    def crash_host(self, host_id: str) -> str:
+        """Simulate `kill -9`: detach the host from the bus and drop every
+        in-memory object WITHOUT any graceful close — exactly what a
+        killed process leaves behind is what survives: the fsync'd WAL,
+        blobs, and snapshots (plus whatever torn tail the crash tore)."""
+        idx = self.host_ids().index(host_id)
+        self.bus.detach(host_id)
+        self.registries.pop(idx)
+        self.services.pop(idx)
+        self.electors = [e for e in self.electors if e.host_id != host_id]
+        return host_id
+
+    def restart_host(self, host_id: str, *, role: str = "follower",
+                     leader: Optional[str] = None) -> DRService:
+        """Rebuild a crashed host from its on-disk state: bootstrap
+        (newest snapshot + WAL suffix, torn tail truncated), then `join()`
+        the live fleet so anti-entropy heals anything newer than the
+        crash point.  `leader` defaults to whoever currently leads among
+        the surviving hosts (h0 for static fleets)."""
+        assert self.durable, "restart_host requires FleetHarness(durable=True)"
+        if role == "follower" and leader is None:
+            live = [r for r in self.reachable() if r.role == "leader"]
+            leader = live[0].transport.host_id if live else "h0"
+        reg = ReplicatedRegistry(self.bus.attach(host_id), role=role,
+                                 leader=leader, quorum=self._quorum,
+                                 sync_on_start=False,
+                                 **self._durable_kw(host_id))
+        if role == "leader":
+            self.leader = reg
+        self.registries.append(reg)
+        if self._elect:
+            self.electors.append(
+                self._make_elector(reg, int(host_id.lstrip("h") or 0)))
+        svc = DRService(registry=reg, clock=self.clock, **self._service_kw)
+        self.services.append(svc)
+        try:
+            reg.join()
+        except Exception:               # noqa: BLE001 — no reachable leader
+            pass                        # yet; anti-entropy heals later
+        return svc
+
+    # ---- fault injection on disk (durable=True) ----------------------------
+    def wal_path(self, host_id: str) -> str:
+        assert self.durable and self.data_root is not None
+        return os.path.join(self.data_root, host_id, "wal.log")
+
+    def inject_torn_tail(self, host_id: str,
+                         garbage: bytes = b"\x00\x00\x01\x99TORN-REC") -> None:
+        """Append garbage after the committed WAL tail — the partial
+        record a mid-append crash leaves; recovery must truncate it and
+        replay only the committed prefix."""
+        with open(self.wal_path(host_id), "ab") as f:
+            f.write(garbage)
 
     # ---- election driving (elect=True) -------------------------------------
     def host_ids(self) -> List[str]:
