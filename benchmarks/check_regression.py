@@ -37,12 +37,30 @@ def main() -> int:
     ap.add_argument("baseline", help="committed benchmarks/baseline.json")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="fail past factor x baseline (default 2.0)")
+    ap.add_argument("--analysis", metavar="FILE",
+                    help="`repro.analysis --format json` report; injected as "
+                    "an 'analysis/findings' row so finding-count creep is "
+                    "visible on the same trajectory as the latency rows")
     args = ap.parse_args()
 
     with open(args.measured) as f:
         measured = {row["name"]: row for row in json.load(f)}
     with open(args.baseline) as f:
         baseline = json.load(f)
+
+    if args.analysis:
+        with open(args.analysis) as f:
+            ana = json.load(f)
+        # `findings_new` is gated at 0 via baseline.json (any un-baselined
+        # finding is a regression); `findings_total`/`findings_baselined`
+        # ride along ungated — grandfathering an exception must not fail
+        # the latency gate, but its count should stay visible.
+        measured["analysis/findings"] = {
+            "name": "analysis/findings",
+            "findings_new": int(ana.get("new", 0)),
+            "findings_total": int(ana.get("total", 0)),
+            "findings_baselined": int(ana.get("baselined", 0)),
+        }
 
     failures = []
     print(f"{'row':<40} {'metric':<14} {'measured':>12} {'baseline':>12} "

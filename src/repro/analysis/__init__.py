@@ -1,0 +1,42 @@
+"""`repro.analysis` — machine-checked invariants for the serving stack.
+
+The serving layer's correctness story rests on a handful of conventions
+that no type checker sees: which lock guards which field, that all time
+flows through the injectable `Clock`, that jitted programs live in the
+`BoundedCompileCache` (never an unbounded `lru_cache`, never re-traced
+per request), and that the durability layer fsyncs before it acks.
+Chaos tests catch violations probabilistically; this package catches
+them deterministically, at parse time.
+
+Pieces:
+
+  * `findings` — the `Finding` record (checker id, severity, file:line,
+    message) every checker emits.
+  * `source` — `SourceUnit`: one parsed file (AST + comment map +
+    annotation extraction for `# guarded-by:` / `# requires-lock:` /
+    `# analysis: allow(...)`).
+  * `registry` — the pluggable checker registry (`@register`).
+  * `checkers/` — the five shipped checkers: lock-discipline,
+    lock-order, clock-discipline, jit-hygiene, fsync-before-ack.
+  * `baseline` — committed grandfather list so the CLI fails only on
+    NEW findings.
+  * `runner` / `report` / `__main__` — scan, render, gate.
+
+CLI:  python -m repro.analysis src/          # exit 1 on any new finding
+      python -m repro.analysis src/ --format json --output findings.json
+
+Annotation syntax (see EXPERIMENTS.md §Invariant catalog):
+
+  self._staged = {}            # guarded-by: _tws_guard
+  def _commit_meta(self, op):
+      # requires-lock: _meta   (callers hold the lock; body counts as held)
+  risky_line()                 # analysis: allow(checker-id) — waiver
+"""
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.registry import all_checkers, register
+from repro.analysis.runner import scan
+from repro.analysis.source import SourceUnit
+
+__all__ = ["Finding", "Severity", "SourceUnit", "all_checkers", "register",
+           "scan"]

@@ -1,0 +1,77 @@
+"""CLI: `python -m repro.analysis <paths...>`.
+
+Exit status 0 when every finding is baselined (or there are none);
+1 when any NEW finding exists; 2 on usage errors.  CI runs this with
+`--format json --output analysis_findings.json` and uploads the file
+as the findings artifact (see .github/workflows/ci.yml).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis import report
+from repro.analysis.registry import all_checkers
+from repro.analysis.runner import scan
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST invariant checks for the repro serving stack")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to scan (default: src)")
+    parser.add_argument("--format", choices=("text", "json"), default="text")
+    parser.add_argument("--output", metavar="FILE",
+                        help="also write the report to FILE")
+    parser.add_argument("--baseline", default=baseline_mod.DEFAULT_BASELINE,
+                        metavar="FILE",
+                        help="grandfather list (default: %(default)s; "
+                        "missing file means empty baseline)")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="rewrite the baseline from this scan's "
+                        "findings and exit 0")
+    parser.add_argument("--checkers", metavar="ID[,ID...]",
+                        help="run only these checker ids")
+    parser.add_argument("--list", action="store_true", dest="list_checkers",
+                        help="list registered checkers and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_checkers:
+        for checker in all_checkers():
+            print(f"{checker.id:20s} {checker.description}")
+        return 0
+
+    checker_ids = args.checkers.split(",") if args.checkers else None
+    try:
+        result = scan(args.paths or ["src"], checker_ids)
+    except KeyError as exc:
+        print(f"repro.analysis: {exc.args[0]}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        baseline_mod.write_baseline(args.baseline, result.findings)
+        print(f"repro.analysis: wrote {len(result.findings)} finding(s) "
+              f"to {args.baseline}")
+        return 0
+
+    known = baseline_mod.load_baseline(args.baseline)
+    new, old = baseline_mod.split(result.findings, known)
+
+    if args.format == "json":
+        rendered = report.dump_json(
+            report.render_json(new, old, result.files_scanned))
+    else:
+        rendered = report.render_text(new, old, result.files_scanned)
+    sys.stdout.write(rendered)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as f:
+            f.write(rendered)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

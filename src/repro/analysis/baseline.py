@@ -1,0 +1,54 @@
+"""Committed baseline of grandfathered findings.
+
+The CLI fails only on findings whose key is NOT in the baseline, so a
+pre-existing violation can be acknowledged (committed to
+`analysis_baseline.json`) without blocking CI, while any regression —
+or any new code tripping a checker — fails immediately.  Keys are
+line-independent (`checker::path::message`), so shifting a
+grandfathered finding around a file does not resurrect it.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable, List, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+_VERSION = 1
+
+
+def load_baseline(path: str) -> Set[str]:
+    """Baseline keys; a missing file is an empty baseline."""
+    if not os.path.exists(path):
+        return set()
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    if data.get("version") != _VERSION:
+        raise ValueError(
+            f"unsupported baseline version {data.get('version')!r} in {path}")
+    return set(data.get("findings", []))
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> None:
+    data = {
+        "version": _VERSION,
+        "comment": ("grandfathered repro.analysis findings — remove entries "
+                    "as they are fixed; add via --write-baseline"),
+        "findings": sorted({f.key for f in findings}),
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def split(findings: Iterable[Finding],
+          baseline: Set[str]) -> Tuple[List[Finding], List[Finding]]:
+    """(new, grandfathered) partition of `findings` against `baseline`."""
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        (old if f.key in baseline else new).append(f)
+    return new, old

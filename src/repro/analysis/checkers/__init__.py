@@ -1,0 +1,9 @@
+"""Built-in checkers.  Importing this package registers them all."""
+
+from repro.analysis.checkers import (  # noqa: F401
+    clock_discipline,
+    fsync_ack,
+    jit_hygiene,
+    lock_discipline,
+    lock_order,
+)

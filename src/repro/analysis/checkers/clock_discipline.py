@@ -1,0 +1,67 @@
+"""clock-discipline: `repro.serve` reads time only through the Clock.
+
+PR 3 made time injectable (`repro.serve.clock`): every deadline, SLO
+window, election timeout, and heartbeat interval flows through a
+`Clock` so the VirtualClock harness can run zero-sleep deterministic
+schedules.  One stray `time.time()` re-introduces wall-clock
+nondeterminism (and NTP-step hazards) that no seeded chaos run can
+reproduce.  So: inside `repro/serve/`, importing `time` or calling
+`time.<anything>` is a finding everywhere except `clock.py`, the one
+sanctioned boundary to the host clock.
+"""
+
+from __future__ import annotations
+
+import ast
+import posixpath
+from typing import Iterable, List
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Checker, register
+from repro.analysis.source import SourceUnit, dotted_name
+
+_BANNED_CALLS = {
+    "time", "monotonic", "monotonic_ns", "time_ns", "sleep",
+    "perf_counter", "perf_counter_ns", "process_time", "process_time_ns",
+}
+
+
+@register
+class ClockDiscipline(Checker):
+    id = "clock-discipline"
+    description = ("no time.time/monotonic/sleep in repro.serve outside "
+                   "clock.py — all time flows through the injectable Clock")
+
+    def applies(self, path: str) -> bool:
+        return ("repro/serve/" in path
+                and posixpath.basename(path) != "clock.py")
+
+    def check(self, unit: SourceUnit) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(unit.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "time" or alias.name.startswith("time."):
+                        findings.append(self._finding(
+                            unit, node.lineno,
+                            "imports 'time' — serve modules must read time "
+                            "through the injectable Clock (repro.serve.clock)"))
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "time":
+                    names = ", ".join(a.name for a in node.names)
+                    findings.append(self._finding(
+                        unit, node.lineno,
+                        f"imports '{names}' from 'time' — use the "
+                        f"injectable Clock (repro.serve.clock)"))
+            elif isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name.startswith("time.") and name.split(".", 1)[1] in _BANNED_CALLS:
+                    findings.append(self._finding(
+                        unit, node.lineno,
+                        f"calls '{name}()' — use the injectable Clock "
+                        f"(repro.serve.clock)"))
+        return findings
+
+    def _finding(self, unit: SourceUnit, line: int, message: str) -> Finding:
+        return Finding(path=unit.path, line=line, checker=self.id,
+                       message=message)

@@ -1,0 +1,107 @@
+"""fsync-before-ack: durability.py never acks un-synced bytes.
+
+The WAL's contract (PR 6) is that `append` returning means the record
+survives kill -9.  That only holds if every function in `durability.py`
+that writes file bytes calls fsync after its last write and before
+returning, and every write destined for a durable path goes
+tmp -> fsync -> rename (rename is the atomic commit point; renaming an
+un-synced file can commit garbage after a crash).
+
+Mechanics, per function body (nested defs judged separately):
+
+  * "writes" are `.write(...)`/`.writelines(...)` calls,
+    `pickle.dump`/`json.dump`, and `.truncate(offset)` with an argument
+    (argument-less `.truncate()` is the WAL's own reset API, not a file
+    op).
+  * rule 1: a function with writes must contain an fsync-ish call
+    (`os.fsync`, `_fsync_dir`, ...) at or after the first write.
+  * rule 2: if it also calls `os.rename`/`os.replace`, an fsync must
+    sit between the first write and the rename.
+
+Functions that rename without writing (e.g. quarantining a corrupt
+snapshot) are out of scope — there are no bytes to sync.
+"""
+
+from __future__ import annotations
+
+import ast
+import posixpath
+from typing import Iterable, List
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Checker, register
+from repro.analysis.source import SourceUnit, dotted_name
+
+_WRITE_METHODS = {"write", "writelines"}
+_DUMPERS = {"pickle.dump", "json.dump", "marshal.dump"}
+_RENAMES = {"os.rename", "os.replace"}
+
+
+@register
+class FsyncBeforeAck(Checker):
+    id = "fsync-before-ack"
+    description = ("durability.py functions that write bytes must fsync "
+                   "before return; durable writes follow tmp+fsync+rename")
+
+    def applies(self, path: str) -> bool:
+        return posixpath.basename(path) == "durability.py"
+
+    def check(self, unit: SourceUnit) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(unit.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                findings.extend(self._check_function(unit, node))
+        return findings
+
+    def _check_function(self, unit: SourceUnit, fn) -> Iterable[Finding]:
+        writes: List[int] = []
+        fsyncs: List[int] = []
+        renames: List[int] = []
+        for node in self._own_nodes(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            leaf = name.rsplit(".", 1)[-1]
+            if leaf in _WRITE_METHODS or name in _DUMPERS:
+                writes.append(node.lineno)
+            elif leaf == "truncate" and node.args:
+                writes.append(node.lineno)
+            elif "fsync" in leaf:
+                fsyncs.append(node.lineno)
+            elif name in _RENAMES:
+                renames.append(node.lineno)
+        if not writes:
+            return []
+        first_write = min(writes)
+        findings: List[Finding] = []
+        if not any(line >= first_write for line in fsyncs):
+            findings.append(Finding(
+                path=unit.path, line=first_write, checker=self.id,
+                message=(f"'{fn.name}' writes bytes but never fsyncs after "
+                         f"the write — a crash after return loses acked "
+                         f"data"),
+            ))
+        for rename_line in renames:
+            if rename_line < first_write:
+                continue
+            if not any(first_write <= line < rename_line for line in fsyncs):
+                findings.append(Finding(
+                    path=unit.path, line=rename_line, checker=self.id,
+                    message=(f"'{fn.name}' renames a freshly written file "
+                             f"without an fsync in between — the atomic "
+                             f"commit can publish un-synced bytes; use "
+                             f"tmp+fsync+rename"),
+                ))
+        return findings
+
+    @staticmethod
+    def _own_nodes(fn):
+        """Walk `fn`'s body without descending into nested def/class."""
+        stack = list(fn.body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Lambda)):
+                continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))

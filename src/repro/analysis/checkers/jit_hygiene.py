@@ -1,0 +1,116 @@
+"""jit-hygiene: compiled programs live in the BoundedCompileCache.
+
+Two failure modes this guards against in `repro/serve/`:
+
+  * `functools.lru_cache` (or `functools.cache`) holding jitted
+    callables.  An unbounded decorator cache pins every traced program
+    forever; under a multi-tenant registry that is a memory leak with a
+    compile-storm chaser.  PR 2 built `BoundedCompileCache` (LRU,
+    locked, race-counted) precisely so serve code never needs the
+    decorator — so in serve modules the decorator is banned outright.
+
+  * `jax.jit` syntactically inside a `for`/`while` body.  A jit call
+    per iteration means a fresh traced callable per iteration — the
+    cache keys on function identity, so every pass restarts tracing.
+    Hoist the jit out of the loop (or build it once in a factory).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Checker, register
+from repro.analysis.source import SourceUnit, dotted_name
+
+
+@register
+class JitHygiene(Checker):
+    id = "jit-hygiene"
+    description = ("no functools.lru_cache in serve (use "
+                   "BoundedCompileCache); no jax.jit inside loops")
+
+    def applies(self, path: str) -> bool:
+        return "repro/serve/" in path
+
+    def check(self, unit: SourceUnit) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        functools_names = self._functools_imports(unit.tree)
+        self._scan(unit, unit.tree.body, loop_depth=0,
+                   functools_names=functools_names, findings=findings)
+        return findings
+
+    @staticmethod
+    def _functools_imports(tree: ast.Module) -> Set[str]:
+        """Local names bound to functools cache decorators."""
+        names: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "functools":
+                for alias in node.names:
+                    if alias.name in ("lru_cache", "cache"):
+                        names.add(alias.asname or alias.name)
+        return names
+
+    def _scan(self, unit: SourceUnit, body, loop_depth: int,
+              functools_names: Set[str], findings: List[Finding]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in stmt.decorator_list:
+                    self._check_cache_use(unit, dec, functools_names,
+                                          findings, decorator=True)
+                # loop depth is lexical: a factory defined inside a loop
+                # still builds a fresh jit per iteration when called
+                self._scan(unit, stmt.body, loop_depth, functools_names,
+                           findings)
+                continue
+            in_loop = isinstance(stmt, (ast.For, ast.AsyncFor, ast.While))
+            for expr in ast.iter_child_nodes(stmt):
+                if isinstance(expr, ast.expr):
+                    self._check_exprs(unit, expr, loop_depth,
+                                      functools_names, findings)
+            for attr in ("body", "orelse", "finalbody"):
+                inner = getattr(stmt, attr, None)
+                if inner and isinstance(inner, list):
+                    depth = loop_depth + 1 if (in_loop and attr == "body") \
+                        else loop_depth
+                    self._scan(unit, inner, depth, functools_names, findings)
+            for handler in getattr(stmt, "handlers", []) or []:
+                self._scan(unit, handler.body, loop_depth, functools_names,
+                           findings)
+
+    def _check_exprs(self, unit: SourceUnit, expr: ast.expr, loop_depth: int,
+                     functools_names: Set[str],
+                     findings: List[Finding]) -> None:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name in ("jax.jit", "jit") and loop_depth > 0:
+                findings.append(Finding(
+                    path=unit.path, line=node.lineno, checker=self.id,
+                    message=("'jax.jit' called inside a loop — every "
+                             "iteration re-traces; hoist the jit (or go "
+                             "through BoundedCompileCache.get_or_build)"),
+                ))
+            self._check_cache_use(unit, node, functools_names, findings,
+                                  decorator=False)
+
+    def _check_cache_use(self, unit: SourceUnit, node: ast.AST,
+                         functools_names: Set[str], findings: List[Finding],
+                         decorator: bool) -> None:
+        target = node
+        if isinstance(target, ast.Call):
+            target = target.func
+        name = dotted_name(target)
+        is_cache = (name in ("functools.lru_cache", "functools.cache")
+                    or name in functools_names)
+        if not is_cache:
+            return
+        where = "as a decorator" if decorator else "called"
+        findings.append(Finding(
+            path=unit.path, line=node.lineno, checker=self.id,
+            message=(f"'{name}' {where} in a serve module — unbounded "
+                     f"decorator caches pin traced programs forever; use "
+                     f"BoundedCompileCache"),
+        ))

@@ -1,0 +1,232 @@
+"""lock-discipline: annotated fields are only mutated under their lock.
+
+Declare the guard on the field's initialisation line:
+
+    self._staged: Dict[str, PyTree] = {}   # guarded-by: _tws_guard
+
+From then on, every syntactic mutation of `self._staged` anywhere in
+the class — assignment, augmented assignment, subscript store, `del`,
+or a call to a mutating container method (`.pop`, `.append`,
+`.update`, ...) — must sit lexically inside `with self._tws_guard:`
+(a call form such as `with self._tws_lock(name):` also counts as
+acquiring `_tws_lock`).
+
+Two escape hatches, both explicit in source:
+
+  * `__init__` bodies are exempt — the object is not yet shared.
+  * a `# requires-lock: <lock>` comment inside a method declares the
+    caller-holds contract: the whole body is analysed as if the lock
+    were held.
+
+The checker is opt-in per field: unannotated fields are never flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Checker, register
+from repro.analysis.source import SourceUnit, self_attr, with_lock_name
+
+# container/collection methods that mutate their receiver in place
+_MUTATORS = {
+    "append", "extend", "insert", "remove", "pop", "popitem", "clear",
+    "update", "setdefault", "add", "discard", "appendleft", "popleft",
+    "move_to_end", "sort", "reverse",
+}
+
+
+@register
+class LockDiscipline(Checker):
+    id = "lock-discipline"
+    description = ("fields annotated '# guarded-by: <lock>' are only mutated "
+                   "inside 'with self.<lock>' blocks")
+
+    def check(self, unit: SourceUnit) -> Iterable[Finding]:
+        guards = unit.guarded_lines()
+        if not guards:
+            return []
+        requires = unit.requires_lock_lines()
+        findings: List[Finding] = []
+        for cls in ast.walk(unit.tree):
+            if isinstance(cls, ast.ClassDef):
+                findings.extend(self._check_class(unit, cls, guards, requires))
+        return findings
+
+    # ---- per-class ---------------------------------------------------------
+
+    def _check_class(self, unit: SourceUnit, cls: ast.ClassDef,
+                     guards: Dict[int, str],
+                     requires: Dict[int, str]) -> Iterable[Finding]:
+        attr_locks = self._collect_annotations(cls, guards)
+        if not attr_locks:
+            return []
+        findings: List[Finding] = []
+        for fn in self._methods(cls):
+            if fn.name == "__init__":
+                continue  # construction precedes sharing
+            base_held = self._declared_held(fn, requires)
+            findings.extend(
+                self._walk(unit, cls, fn, fn.body, attr_locks,
+                           held=frozenset(base_held), guards=guards))
+        return findings
+
+    @staticmethod
+    def _methods(cls: ast.ClassDef):
+        for node in cls.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+
+    @staticmethod
+    def _collect_annotations(cls: ast.ClassDef,
+                             guards: Dict[int, str]) -> Dict[str, str]:
+        """Map attr name -> guarding lock, from annotated `self.X = ...`."""
+        attr_locks: Dict[str, str] = {}
+        for node in ast.walk(cls):
+            targets: List[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign):
+                targets = [node.target]
+            else:
+                continue
+            lock = guards.get(node.lineno)
+            if lock is None and hasattr(node, "end_lineno"):
+                # comment sits at the end of a multi-line statement
+                lock = guards.get(node.end_lineno or node.lineno)
+            if lock is None:
+                continue
+            for t in targets:
+                attr = self_attr(t)
+                if attr is not None:
+                    attr_locks[attr] = lock
+        return attr_locks
+
+    @staticmethod
+    def _declared_held(fn: ast.AST, requires: Dict[int, str]) -> List[str]:
+        """`# requires-lock:` annotations whose line falls inside `fn`."""
+        start = fn.lineno
+        end = getattr(fn, "end_lineno", start) or start
+        return [lock for line, lock in requires.items() if start <= line <= end]
+
+    # ---- statement walk with lexical held-set ------------------------------
+
+    def _walk(self, unit: SourceUnit, cls: ast.ClassDef, fn, body,
+              attr_locks: Dict[str, str], held: frozenset,
+              guards: Dict[int, str]) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for stmt in body:
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                acquired = {name for item in stmt.items
+                            if (name := with_lock_name(item)) is not None}
+                findings.extend(self._walk(unit, cls, fn, stmt.body,
+                                           attr_locks, held | acquired,
+                                           guards))
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a nested def is deferred work: it may run after the
+                # enclosing with-block exits, so the held-set resets
+                findings.extend(self._walk(unit, cls, fn, stmt.body,
+                                           attr_locks, frozenset(), guards))
+                continue
+            findings.extend(self._check_stmt(unit, cls, fn, stmt,
+                                             attr_locks, held, guards))
+            for child_body in self._inner_bodies(stmt):
+                findings.extend(self._walk(unit, cls, fn, child_body,
+                                           attr_locks, held, guards))
+        return findings
+
+    @staticmethod
+    def _inner_bodies(stmt: ast.stmt):
+        for attr in ("body", "orelse", "finalbody"):
+            body = getattr(stmt, attr, None)
+            if body:
+                yield body
+        for handler in getattr(stmt, "handlers", []) or []:
+            yield handler.body
+
+    def _check_stmt(self, unit: SourceUnit, cls: ast.ClassDef, fn,
+                    stmt: ast.stmt, attr_locks: Dict[str, str],
+                    held: frozenset, guards: Dict[int, str]):
+        findings: List[Finding] = []
+        for attr, line in self._mutations(stmt):
+            lock = attr_locks.get(attr)
+            if lock is None or lock in held:
+                continue
+            if line in guards:
+                continue  # the annotated declaration line itself
+            findings.append(Finding(
+                path=unit.path, line=line, checker=self.id,
+                message=(f"'{cls.name}.{attr}' is guarded by "
+                         f"'self.{lock}' but '{fn.name}' mutates it "
+                         f"without holding the lock"),
+            ))
+        return findings
+
+    # ---- mutation extraction ----------------------------------------------
+
+    def _mutations(self, stmt: ast.stmt) -> Iterable[Tuple[str, int]]:
+        """(attr, line) pairs for every `self.<attr>` mutation in `stmt`.
+
+        Scans the statement's own expressions only — nested statement
+        bodies are walked (with the right held-set) by `_walk`.
+        """
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                yield from self._target_mutations(t)
+            yield from self._call_mutations(stmt.value)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            yield from self._target_mutations(stmt.target)
+            yield from self._call_mutations(stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            yield from self._target_mutations(stmt.target)
+            yield from self._call_mutations(stmt.value)
+        elif isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                yield from self._target_mutations(t)
+        elif isinstance(stmt, ast.Expr):
+            yield from self._call_mutations(stmt.value)
+        elif isinstance(stmt, (ast.Return, ast.If, ast.While, ast.For,
+                               ast.Assert, ast.Raise)):
+            for expr in self._stmt_exprs(stmt):
+                yield from self._call_mutations(expr)
+
+    @staticmethod
+    def _stmt_exprs(stmt: ast.stmt):
+        for attr in ("value", "test", "iter", "exc"):
+            expr = getattr(stmt, attr, None)
+            if isinstance(expr, ast.expr):
+                yield expr
+
+    def _target_mutations(self, target: ast.expr) -> Iterable[Tuple[str, int]]:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                yield from self._target_mutations(elt)
+            return
+        if isinstance(target, ast.Starred):
+            yield from self._target_mutations(target.value)
+            return
+        node = target
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        attr = self_attr(node)
+        if attr is not None:
+            yield attr, target.lineno
+
+    def _call_mutations(self, expr: Optional[ast.expr]):
+        """Calls to in-place mutators reachable from `expr`, e.g.
+        `self._q.append(t)` or `x = self._d.pop(k)`."""
+        if expr is None:
+            return
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if not (isinstance(func, ast.Attribute)
+                    and func.attr in _MUTATORS):
+                continue
+            attr = self_attr(func.value)
+            if attr is not None:
+                yield attr, node.lineno

@@ -1,0 +1,141 @@
+"""lock-order: the static lock-acquisition graph must be acyclic.
+
+Every lexically nested pair of lock-like `with self.X:` blocks adds an
+edge X -> Y ("X is held while Y is acquired") to a graph accumulated
+across all scanned files.  Nodes are named `ClassName.attr` (call forms
+like `self._tws_lock(name)` render as `ClassName._tws_lock()`).  After
+the scan, any cycle in that graph is a potential deadlock: two threads
+taking the same pair of locks in opposite orders.
+
+"Lock-like" is a name heuristic — attributes matching
+lock|guard|mutex|meta|mutate|cond|sem — because `with` is also Python's
+resource-management statement and we must not turn `with self.session:`
+into a phantom lock node.
+
+This is the static half; `tests/harness.lock_order_watch` builds the
+same graph from actual acquisitions at runtime under the chaos suites.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Checker, register
+from repro.analysis.source import SourceUnit
+
+_LOCK_LIKE = re.compile(r"lock|guard|mutex|meta|mutate|cond|sem", re.I)
+
+Edge = Tuple[str, str]
+
+
+@register
+class LockOrder(Checker):
+    id = "lock-order"
+    description = ("the static acquisition graph over nested "
+                   "'with self.<lock>' pairs must be acyclic")
+
+    def __init__(self) -> None:
+        # edge -> (path, line, context) of the inner acquisition
+        self.edges: Dict[Edge, Tuple[str, int, str]] = {}
+
+    def check(self, unit: SourceUnit) -> Iterable[Finding]:
+        for cls in ast.walk(unit.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            for fn in cls.body:
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._collect(unit, cls.name, fn.name, fn.body, held=[])
+        return []  # findings are cross-file; emitted by finalize()
+
+    def _collect(self, unit: SourceUnit, cls_name: str, fn_name: str,
+                 body: List[ast.stmt], held: List[str]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                acquired = []
+                for item in stmt.items:
+                    node = self._lock_node(cls_name, item)
+                    if node is None:
+                        continue
+                    for h in held:
+                        if h != node and (h, node) not in self.edges:
+                            self.edges[(h, node)] = (
+                                unit.path, stmt.lineno,
+                                f"{cls_name}.{fn_name}")
+                    acquired.append(node)
+                self._collect(unit, cls_name, fn_name, stmt.body,
+                              held + acquired)
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # deferred execution: a closure does not inherit the
+                # lexical held-set at call time
+                self._collect(unit, cls_name, fn_name, stmt.body, held=[])
+                continue
+            for attr in ("body", "orelse", "finalbody"):
+                inner = getattr(stmt, attr, None)
+                if inner:
+                    self._collect(unit, cls_name, fn_name, inner, held)
+            for handler in getattr(stmt, "handlers", []) or []:
+                self._collect(unit, cls_name, fn_name, handler.body, held)
+
+    @staticmethod
+    def _lock_node(cls_name: str, item: ast.withitem) -> Optional[str]:
+        expr = item.context_expr
+        suffix = ""
+        if isinstance(expr, ast.Call):
+            expr = expr.func
+            suffix = "()"
+        if (isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id == "self"
+                and _LOCK_LIKE.search(expr.attr)):
+            return f"{cls_name}.{expr.attr}{suffix}"
+        return None
+
+    # ---- cycle detection ---------------------------------------------------
+
+    def finalize(self) -> Iterable[Finding]:
+        adj: Dict[str, List[str]] = {}
+        for a, b in self.edges:
+            adj.setdefault(a, []).append(b)
+        findings: List[Finding] = []
+        seen_cycles = set()
+        state: Dict[str, int] = {}  # 0 unvisited / 1 on stack / 2 done
+
+        def dfs(node: str, stack: List[str]):
+            state[node] = 1
+            stack.append(node)
+            for nxt in sorted(adj.get(node, [])):
+                if state.get(nxt, 0) == 1:
+                    cycle = stack[stack.index(nxt):] + [nxt]
+                    key = frozenset(cycle)
+                    if key not in seen_cycles:
+                        seen_cycles.add(key)
+                        findings.append(self._cycle_finding(cycle))
+                elif state.get(nxt, 0) == 0:
+                    dfs(nxt, stack)
+            stack.pop()
+            state[node] = 2
+
+        for node in sorted(adj):
+            if state.get(node, 0) == 0:
+                dfs(node, [])
+        return findings
+
+    def _cycle_finding(self, cycle: List[str]) -> Finding:
+        closing = (cycle[-2], cycle[-1])
+        path, line, ctx = self.edges.get(
+            closing, next(iter(self.edges.values())))
+        arrows = " -> ".join(cycle)
+        where = "; ".join(
+            f"{a}->{b} at {p}:{l} ({c})"
+            for (a, b), (p, l, c) in sorted(self.edges.items())
+            if a in cycle and b in cycle)
+        return Finding(
+            path=path, line=line, checker=self.id,
+            message=(f"static lock-order cycle {arrows} — two threads "
+                     f"taking these in opposite orders deadlock "
+                     f"[{where}]"),
+        )

@@ -1,0 +1,47 @@
+"""The findings model: what every checker emits.
+
+A `Finding` is one violation at one source location.  The baseline key
+deliberately excludes the line number so that unrelated edits shifting
+a grandfathered finding up or down a file do not resurrect it as "new".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class Severity(str, enum.Enum):
+    ERROR = "error"
+    WARNING = "warning"
+
+    def __str__(self) -> str:  # render as bare "error"/"warning"
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str          # posix-style, relative to the scan root when possible
+    line: int          # 1-based; 0 when the finding is file-scoped
+    checker: str       # registry id, e.g. "lock-discipline"
+    message: str
+    severity: Severity = Severity.ERROR
+
+    @property
+    def key(self) -> str:
+        """Line-independent identity used by the baseline."""
+        return f"{self.checker}::{self.path}::{self.message}"
+
+    @property
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def to_dict(self) -> dict:
+        return {
+            "path": self.path,
+            "line": self.line,
+            "checker": self.checker,
+            "severity": self.severity.value,
+            "message": self.message,
+            "key": self.key,
+        }

@@ -1,0 +1,57 @@
+"""Pluggable checker registry.
+
+A checker is a class with:
+
+    id          unique kebab-case string (what findings and baselines key on)
+    description one line, shown by `python -m repro.analysis --list`
+    applies(path)      -> bool   path filter (posix-style path string)
+    check(unit)        -> iterable of Finding  (per file)
+    finalize()         -> iterable of Finding  (after all files; for
+                          cross-file checkers like lock-order)
+
+Register with the `@register` decorator.  `all_checkers()` instantiates
+a fresh set per run so cross-file state never leaks between scans.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Type
+
+from repro.analysis.findings import Finding
+from repro.analysis.source import SourceUnit
+
+
+class Checker:
+    id: str = ""
+    description: str = ""
+
+    def applies(self, path: str) -> bool:
+        return True
+
+    def check(self, unit: SourceUnit) -> Iterable[Finding]:
+        return ()
+
+    def finalize(self) -> Iterable[Finding]:
+        return ()
+
+
+_REGISTRY: Dict[str, Type[Checker]] = {}
+
+
+def register(cls: Type[Checker]) -> Type[Checker]:
+    if not cls.id:
+        raise ValueError(f"checker {cls.__name__} has no id")
+    if cls.id in _REGISTRY:
+        raise ValueError(f"duplicate checker id {cls.id!r}")
+    _REGISTRY[cls.id] = cls
+    return cls
+
+
+def all_checkers(only: Optional[Iterable[str]] = None) -> List[Checker]:
+    """Fresh checker instances, optionally restricted to ids in `only`."""
+    import repro.analysis.checkers  # noqa: F401  (registers built-ins)
+    ids = sorted(_REGISTRY) if only is None else list(only)
+    unknown = [i for i in ids if i not in _REGISTRY]
+    if unknown:
+        raise KeyError(f"unknown checker id(s): {', '.join(unknown)}")
+    return [_REGISTRY[i]() for i in ids]

@@ -1,0 +1,37 @@
+"""Text and JSON reporters for analysis findings."""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from repro.analysis.findings import Finding
+
+
+def render_text(new: List[Finding], old: List[Finding],
+                files_scanned: int) -> str:
+    lines: List[str] = []
+    for f in sorted(new):
+        lines.append(f"{f.location}: {f.severity}: [{f.checker}] {f.message}")
+    for f in sorted(old):
+        lines.append(f"{f.location}: baselined: [{f.checker}] {f.message}")
+    lines.append(
+        f"repro.analysis: {files_scanned} file(s) scanned, "
+        f"{len(new)} new finding(s), {len(old)} baselined")
+    return "\n".join(lines) + "\n"
+
+
+def render_json(new: List[Finding], old: List[Finding],
+                files_scanned: int) -> Dict:
+    return {
+        "files_scanned": files_scanned,
+        "total": len(new) + len(old),
+        "new": len(new),
+        "baselined": len(old),
+        "findings": [f.to_dict() for f in sorted(new)],
+        "baselined_findings": [f.to_dict() for f in sorted(old)],
+    }
+
+
+def dump_json(payload: Dict) -> str:
+    return json.dumps(payload, indent=2, sort_keys=True) + "\n"

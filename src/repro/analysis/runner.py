@@ -1,0 +1,77 @@
+"""File discovery + scan loop: paths in, findings out."""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.registry import all_checkers
+from repro.analysis.source import SourceUnit
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "venv", "node_modules",
+              ".pytest_cache", ".hypothesis", ".eggs"}
+
+
+@dataclass
+class ScanResult:
+    findings: List[Finding] = field(default_factory=list)
+    files_scanned: int = 0
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterable[str]:
+    """Expand files/directories into sorted .py paths, posix-separated.
+
+    Bytecode caches, VCS metadata, and virtualenvs are skipped so a
+    scan of `src/` stays clean even with stale `__pycache__` trees on
+    disk (see .gitignore).
+    """
+    out: List[str] = []
+    for path in paths:
+        if os.path.isfile(path):
+            if path.endswith(".py"):
+                out.append(path)
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in _SKIP_DIRS and not d.startswith("."))
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    out.append(os.path.join(root, name))
+    return [p.replace(os.sep, "/") for p in sorted(out)]
+
+
+def scan(paths: Iterable[str],
+         checker_ids: Optional[Iterable[str]] = None) -> ScanResult:
+    """Run all (or the named) checkers over every .py file under `paths`."""
+    checkers = all_checkers(checker_ids)
+    result = ScanResult()
+    for file_path in iter_python_files(paths):
+        try:
+            with open(file_path, "r", encoding="utf-8") as f:
+                text = f.read()
+        except (OSError, UnicodeDecodeError) as exc:
+            result.findings.append(Finding(
+                path=file_path, line=0, checker="parse",
+                message=f"unreadable: {exc}", severity=Severity.WARNING))
+            continue
+        result.files_scanned += 1
+        try:
+            unit = SourceUnit.parse(file_path, text)
+        except SyntaxError as exc:
+            result.findings.append(Finding(
+                path=file_path, line=exc.lineno or 0, checker="parse",
+                message=f"syntax error: {exc.msg}"))
+            continue
+        for checker in checkers:
+            if not checker.applies(unit.path):
+                continue
+            for finding in checker.check(unit):
+                if unit.allows(finding.line, finding.checker):
+                    continue  # explicit `# analysis: allow(id)` waiver
+                result.findings.append(finding)
+    for checker in checkers:
+        result.findings.extend(checker.finalize())
+    result.findings.sort()
+    return result

@@ -1,0 +1,114 @@
+"""`SourceUnit`: one parsed Python file, with its comments attached.
+
+Python's `ast` throws comments away, but our annotation language lives
+in comments (`# guarded-by: _lock`, `# requires-lock: _meta`,
+`# analysis: allow(checker-id)`).  `SourceUnit` runs `tokenize` next to
+`ast.parse` and keeps a line → comment map so checkers can correlate
+the two.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+_GUARDED_BY = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
+_REQUIRES_LOCK = re.compile(r"#\s*requires-lock:\s*([A-Za-z_]\w*)")
+_ALLOW = re.compile(r"#\s*analysis:\s*allow\(\s*([a-z0-9-]+)\s*\)")
+
+
+@dataclass
+class SourceUnit:
+    path: str                      # posix-style path as scanned
+    text: str
+    tree: ast.Module
+    comments: Dict[int, str] = field(default_factory=dict)  # line -> "# ..."
+
+    @classmethod
+    def parse(cls, path: str, text: str) -> "SourceUnit":
+        """Parse `text`; raises SyntaxError (runner turns it into a finding)."""
+        tree = ast.parse(text, filename=path)
+        return cls(path=path, text=text, tree=tree, comments=_comments(text))
+
+    # ---- annotation extraction -------------------------------------------
+
+    def guarded_by(self, line: int) -> Optional[str]:
+        """Lock name from a `# guarded-by: <lock>` comment on `line`."""
+        m = _GUARDED_BY.search(self.comments.get(line, ""))
+        return m.group(1) if m else None
+
+    def guarded_lines(self) -> Dict[int, str]:
+        out = {}
+        for line, comment in self.comments.items():
+            m = _GUARDED_BY.search(comment)
+            if m:
+                out[line] = m.group(1)
+        return out
+
+    def requires_lock_lines(self) -> Dict[int, str]:
+        """Lines carrying `# requires-lock: <lock>` annotations.
+
+        The lock-discipline checker attaches each one to the innermost
+        function whose span contains the line, and treats that whole
+        function body as holding the lock (a caller-holds contract).
+        """
+        out = {}
+        for line, comment in self.comments.items():
+            m = _REQUIRES_LOCK.search(comment)
+            if m:
+                out[line] = m.group(1)
+        return out
+
+    def allows(self, line: int, checker_id: str) -> bool:
+        """True if `line` carries `# analysis: allow(<checker_id>)`."""
+        m = _ALLOW.search(self.comments.get(line, ""))
+        return bool(m and m.group(1) == checker_id)
+
+
+def _comments(text: str) -> Dict[int, str]:
+    out: Dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                out[tok.start[0]] = tok.string
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass  # best-effort: a truncated token stream keeps what it saw
+    return out
+
+
+# ---- shared AST helpers used by several checkers --------------------------
+
+def self_attr(node: ast.AST) -> Optional[str]:
+    """`self.X` -> "X", else None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def with_lock_name(item: ast.withitem) -> Optional[str]:
+    """Lock attribute acquired by a with-item, if it is self-based.
+
+    Recognizes `with self._lock:` and `with self._tws_lock(name):` —
+    both return the attribute name.
+    """
+    expr = item.context_expr
+    if isinstance(expr, ast.Call):
+        expr = expr.func
+    return self_attr(expr)
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Best-effort dotted rendering of a Name/Attribute chain ("os.fsync")."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))

@@ -114,14 +114,16 @@ def run_cell(arch_id: str, shape_name: str, mesh_name: str, *, verbose=True,
         return {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
                 "status": "skipped", "reason": why}
 
-    t0 = time.time()
+    # monotonic, not wall clock: an NTP step mid-compile would otherwise
+    # report negative (or wildly inflated) lowering/compile durations
+    t0 = time.monotonic()
     lowered, model_flops, state_bytes, meta = build_cell(
         arch_id, shape_name, mesh, opt_override=opt_override)
-    t_lower = time.time() - t0
+    t_lower = time.monotonic() - t0
 
-    t0 = time.time()
+    t0 = time.monotonic()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.monotonic() - t0
 
     try:
         mem = compiled.memory_analysis()

@@ -103,12 +103,12 @@ class BoundedCompileCache:
         if maxsize < 1:
             raise ValueError("maxsize must be >= 1")
         self.maxsize = maxsize
-        self._d: "collections.OrderedDict[Hashable, Any]" = collections.OrderedDict()
+        self._d: "collections.OrderedDict[Hashable, Any]" = collections.OrderedDict()  # guarded-by: _lock
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.races = 0      # lost build races: real compile work, discarded
+        self.hits = 0  # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.evictions = 0  # guarded-by: _lock
+        self.races = 0      # guarded-by: _lock (lost build races, discarded)
 
     def __len__(self) -> int:
         with self._lock:
@@ -236,13 +236,13 @@ class MicroBatcher:
         if max_queue < 1:
             raise ValueError("max_queue must be >= 1")
         self.max_queue = max_queue
-        self._q: List[_Pending] = []
+        self._q: List[_Pending] = []  # guarded-by: _lock
         self._lock = threading.Lock()
         # metrics
-        self.submitted = 0
-        self.served = 0
-        self.rejected = 0
-        self.peak_depth = 0
+        self.submitted = 0  # guarded-by: _lock
+        self.served = 0  # guarded-by: _lock
+        self.rejected = 0  # guarded-by: _lock
+        self.peak_depth = 0  # guarded-by: _lock
 
     def queue_depth(self) -> int:
         with self._lock:

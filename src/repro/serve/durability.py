@@ -138,8 +138,8 @@ class WriteAheadLog:
         self.fsync = fsync
         self._lock = threading.Lock()
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        self.records: List[Any] = self._recover()
-        self._f = open(path, "ab")
+        self.records: List[Any] = self._recover()  # guarded-by: _lock
+        self._f = open(path, "ab")  # guarded-by: _lock
 
     def _recover(self) -> List[Any]:
         """Parse the committed prefix; physically truncate anything after

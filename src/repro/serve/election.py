@@ -93,17 +93,17 @@ class Elector:
         # transport I/O (vote rounds / heartbeats run on a snapshot), so
         # two threaded electors messaging each other cannot deadlock.
         self._lock = threading.RLock()
-        self.state = "leader" if registry.role == "leader" else "follower"
+        self.state = "leader" if registry.role == "leader" else "follower"  # guarded-by: _lock
         # term -> candidate granted.  Seeded from the registry's persisted
         # vote map (durable hosts): a vote granted before a crash is a
         # vote granted after the restart — never a second grant per term.
-        self._voted: Dict[int, str] = dict(registry.recovered_votes())
-        self._last_heartbeat = self.clock.now()
-        self._last_beat_sent = float("-inf")
-        self._timeout_ms = self._new_timeout()
-        self.elections_started = 0
-        self.won_terms: list = []               # terms this host won (tests)
-        self._closed = False
+        self._voted: Dict[int, str] = dict(registry.recovered_votes())  # guarded-by: _lock
+        self._last_heartbeat = self.clock.now()  # guarded-by: _lock
+        self._last_beat_sent = float("-inf")  # guarded-by: _lock
+        self._timeout_ms = self._new_timeout()  # guarded-by: _lock
+        self.elections_started = 0  # guarded-by: _lock
+        self.won_terms: list = []  # guarded-by: _lock (terms this host won (tests))
+        self._closed = False  # guarded-by: _cond
         self._thread: Optional[threading.Thread] = None
         self._cond = threading.Condition()
         registry.attach_elector(self)
@@ -150,6 +150,7 @@ class Elector:
             self._run_election(now)
 
     def _step_down(self, now: float) -> None:
+        # requires-lock: _lock
         """Demote to follower with a fresh grace period (caller holds
         `_lock`) — the one shape every demotion site shares."""
         self.state = "follower"

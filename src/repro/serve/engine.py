@@ -126,21 +126,21 @@ class DRService:
         # pop → push → promote must be atomic w.r.t. a concurrent
         # serve_and_update, or an update chained onto the pre-promote base
         # lands between the pop and the push and is silently orphaned.
-        self._staged: Dict[str, PyTree] = {}
-        self._accum: Dict[str, float] = {}
-        self._updates: Dict[str, int] = {}
+        self._staged: Dict[str, PyTree] = {}        # guarded-by: _tws_guard
+        self._accum: Dict[str, float] = {}          # guarded-by: _tws_guard
+        self._updates: Dict[str, int] = {}          # guarded-by: _tws_guard
         # (staged object, version) of a push whose promote failed — a retry
         # with the SAME chain re-promotes that version instead of pushing a
         # duplicate (a replicated push re-ships the full state to the fleet)
-        self._staged_pushed: Dict[str, Tuple[PyTree, int]] = {}
+        self._staged_pushed: Dict[str, Tuple[PyTree, int]] = {}  # guarded-by: _tws_guard
         self._tws_guard = threading.Lock()          # guards the lock table
-        self._tws_locks: Dict[str, threading.Lock] = {}
+        self._tws_locks: Dict[str, threading.Lock] = {}  # guarded-by: _tws_guard
         # serving metrics — counters are bumped from caller threads AND a
         # DeadlineScheduler loop, so mutations AND reads hold this lock
         self._metrics_lock = threading.Lock()
-        self.served_rows = 0
-        self.padded_rows = 0
-        self.batches_run = 0
+        self.served_rows = 0                        # guarded-by: _metrics_lock
+        self.padded_rows = 0                        # guarded-by: _metrics_lock
+        self.batches_run = 0                        # guarded-by: _metrics_lock
 
     def _tws_lock(self, name: str) -> threading.Lock:
         with self._tws_guard:

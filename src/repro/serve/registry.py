@@ -55,7 +55,7 @@ class Snapshot:
 
 class ModelRegistry:
     def __init__(self):
-        self._entries: Dict[str, _Entry] = {}
+        self._entries: Dict[str, _Entry] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
 
     # ---- listing -----------------------------------------------------------

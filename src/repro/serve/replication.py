@@ -146,15 +146,15 @@ class ReplicatedRegistry:
         if quorum is not None and quorum < 1:
             raise ValueError("quorum must be >= 1")
         self.transport = transport
-        self.role = role
-        self.leader = transport.host_id if role == "leader" else leader
+        self.role = role  # guarded-by: _meta
+        self.leader = transport.host_id if role == "leader" else leader  # guarded-by: _meta
         self.quorum = quorum
         self.local = ModelRegistry()
         # election state: `term` is the fencing epoch every replication RPC
         # carries (static fleets stay at 0 forever — no fencing triggers);
         # `elector` is attached by `repro.serve.election.Elector` and turns
         # on dynamic roles + forwarding of mutations to the current leader.
-        self.term = 0
+        self.term = 0  # guarded-by: _meta
         self.elector: Optional[Any] = None
         # `_mutate` serializes whole leader mutations (append + broadcast +
         # quorum wait).  `_meta` guards the log/state-store/applied maps and
@@ -163,17 +163,17 @@ class ReplicatedRegistry:
         # holding one lock across both is how a TCP fleet deadlocks.
         self._mutate = threading.RLock()
         self._meta = threading.RLock()
-        self._log: Dict[str, List[Op]] = {}
-        self._applied: Dict[str, int] = {}          # name -> last applied seq
-        self._states: Dict[str, PyTree] = {}        # content hash -> state
-        self._vhash: Dict[str, List[str]] = {}      # name -> version -> hash
+        self._log: Dict[str, List[Op]] = {}  # guarded-by: _meta
+        self._applied: Dict[str, int] = {}  # guarded-by: _meta (name -> last applied seq)
+        self._states: Dict[str, PyTree] = {}  # guarded-by: _meta (content hash -> state)
+        self._vhash: Dict[str, List[str]] = {}  # guarded-by: _meta (name -> version -> hash)
         # durability: `_voted` is the persisted term->candidate vote map
         # (the elector reads it back on attach so a restarted host never
         # double-votes); `_recovering` suppresses WAL re-writes while the
         # recovery replay runs ops through the normal `_apply` path.
         self.durable: Optional[DurableStore] = None
-        self._voted: Dict[int, str] = {}
-        self._recovering = False
+        self._voted: Dict[int, str] = {}  # guarded-by: _meta
+        self._recovering = False  # guarded-by: _meta
         if data_dir is not None:
             self.durable = DurableStore(data_dir, fsync=fsync,
                                         compact_every=compact_every)
@@ -285,9 +285,15 @@ class ReplicatedRegistry:
         treated like ops this host never received; `join()`'s
         anti-entropy re-pulls it from the fleet)."""
         rec = self.durable.recover()
-        self._voted = dict(rec.voted)
-        self.term = max(self.term, rec.term)
-        self._recovering = True
+        # `_meta` is uncontended here (the transport handler isn't wired
+        # yet), but these fields are lock-guarded everywhere else and the
+        # recovery replay below re-enters `_meta` through `_apply` anyway —
+        # an RLock makes holding it here free, and keeps the guarded-by
+        # discipline unconditional instead of "except during bootstrap".
+        with self._meta:
+            self._voted = dict(rec.voted)
+            self.term = max(self.term, rec.term)
+            self._recovering = True
         try:
             for name, ops in rec.ops.items():
                 for op in ops:
@@ -304,7 +310,8 @@ class ReplicatedRegistry:
                     except ReplicationError:
                         break           # local divergence: let sync() heal
         finally:
-            self._recovering = False
+            with self._meta:
+                self._recovering = False
 
     def _persist_term(self) -> None:
         """WAL the current term (caller holds `_meta`; no-op when not
@@ -596,6 +603,7 @@ class ReplicatedRegistry:
 
     # ---- internals: apply / log -------------------------------------------
     def _commit_meta(self, op: Op, payload: Optional[PyTree]) -> None:
+        # requires-lock: _meta
         """Record an op already applied to the local registry (caller holds
         `_meta`): log, applied seq, content store, version->hash map — and,
         on a durable host, blob + WAL (payload before op record, so a

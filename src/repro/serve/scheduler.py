@@ -75,8 +75,8 @@ class DeadlineScheduler:
         if self.flush_rows < 1:
             raise ValueError("flush_rows must be >= 1")
         self._cond = threading.Condition()
-        self._stop = False
-        self._drain_on_stop = True
+        self._stop = False  # guarded-by: _cond
+        self._drain_on_stop = True  # guarded-by: _cond
         self._thread: Optional[threading.Thread] = None
         self.flushes = 0          # batches flushed by this scheduler
         self.polls = 0

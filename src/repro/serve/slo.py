@@ -33,13 +33,13 @@ class LatencyStats:
     def __init__(self, window: int = 4096):
         if window < 1:
             raise ValueError("window must be >= 1")
-        self._samples: "collections.deque[float]" = collections.deque(maxlen=window)
+        self._samples: "collections.deque[float]" = collections.deque(maxlen=window)  # guarded-by: _lock
         # one lock per stats object: record() runs on the scheduler loop
         # thread while metrics() readers iterate the window from another
         self._lock = threading.Lock()
-        self.count = 0
-        self.total_ms = 0.0
-        self.max_ms = 0.0
+        self.count = 0  # guarded-by: _lock
+        self.total_ms = 0.0  # guarded-by: _lock
+        self.max_ms = 0.0  # guarded-by: _lock
 
     def record(self, ms: float) -> None:
         ms = float(ms)
@@ -135,7 +135,7 @@ class SLOTracker:
 
     def __init__(self, window: int = 4096):
         self._window = window
-        self._cells: Dict[Tuple[str, Hashable], BucketSLO] = {}
+        self._cells: Dict[Tuple[str, Hashable], BucketSLO] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def cell(self, name: str, bucket: Hashable) -> BucketSLO:

@@ -88,12 +88,12 @@ class LocalBus:
     """
 
     def __init__(self):
-        self._hosts: Dict[str, "_LocalEndpoint"] = {}
-        self._partitioned: set = set()
+        self._hosts: Dict[str, "_LocalEndpoint"] = {}  # guarded-by: _lock
+        self._partitioned: set = set()  # guarded-by: _lock
         self._lock = threading.Lock()
         self.intercept: Optional[Callable[[str, str, Message], bool]] = None
-        self.sent = 0
-        self.dropped = 0
+        self.sent = 0  # guarded-by: _lock
+        self.dropped = 0  # guarded-by: _lock
 
     def attach(self, host_id: str) -> "_LocalEndpoint":
         with self._lock:
@@ -214,7 +214,7 @@ class TCPTransport:
                  port: int = 0, timeout_s: float = 10.0):
         self.host_id = host_id
         self.timeout_s = timeout_s
-        self._peers: Dict[str, Tuple[str, int]] = {}
+        self._peers: Dict[str, Tuple[str, int]] = {}  # guarded-by: _lock
         self._handler: Optional[Handler] = None
         self._lock = threading.Lock()
         self._closed = False

@@ -5,7 +5,19 @@ schedules in `tests/test_election.py`): the CI `chaos` job sweeps the
 suite across 20 distinct seeds, while a bare run uses seed 0.  Every
 chaos test derives ALL its randomness from this one seed, so any failing
 seed replays exactly with `pytest -m chaos --seed N`.
+
+Lock-order watching: every `chaos`-marked test (and, with LOCK_ORDER=1,
+every test — how the CI chaos and soak jobs run) executes under
+`tests.harness.lock_order_watch`, which wraps each Lock/RLock the serve
+code creates and records the held-set at every acquisition.  Teardown
+asserts the observed acquisition graph is acyclic, turning each chaos
+schedule into a deadlock-freedom proof for the orders it exercised.
+This is wired through runtest hooks rather than an autouse fixture so
+hypothesis-driven tests (which reject function-scoped fixtures) are
+covered too.
 """
+
+import os
 
 import pytest
 
@@ -19,3 +31,25 @@ def pytest_addoption(parser):
 @pytest.fixture
 def chaos_seed(request) -> int:
     return request.config.getoption("--seed")
+
+
+def _lock_watch_enabled(item) -> bool:
+    if os.environ.get("LOCK_ORDER") == "1":
+        return True
+    return item.get_closest_marker("chaos") is not None
+
+
+def pytest_runtest_setup(item):
+    if _lock_watch_enabled(item):
+        from harness import lock_order_watch
+        watch = lock_order_watch()
+        watch.__enter__()
+        item._lock_order_watch = watch
+
+
+def pytest_runtest_teardown(item, nextitem):
+    watch = getattr(item, "_lock_order_watch", None)
+    if watch is not None:
+        del item._lock_order_watch
+        watch.__exit__(None, None, None)
+        watch.assert_acyclic()

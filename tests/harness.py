@@ -381,3 +381,188 @@ class FleetHarness:
 
     def statuses(self) -> Dict[str, Dict[str, Any]]:
         return {r.transport.host_id: r.status() for r in self.registries}
+
+
+# ---------------------------------------------------------------------------
+# runtime lock-order race detector
+# ---------------------------------------------------------------------------
+#
+# The static half lives in `repro.analysis.checkers.lock_order` (nested
+# `with self.<lock>` pairs must form an acyclic graph).  This is the
+# dynamic half: wrap every Lock/RLock that serve code CREATES while a
+# watch is active, record the held-set at every successful acquisition,
+# and assert at teardown that the observed acquisition graph — what the
+# chaos schedules actually exercised, including orders no `with` block
+# spells out lexically — is acyclic.  Together they prove both the
+# declared and the exercised orderings deadlock-free.
+
+import sys
+import threading
+
+
+class _LockOrderGraph:
+    """Edges 'A was held while B was acquired', across all threads."""
+
+    def __init__(self) -> None:
+        self._mu = threading.Lock()        # guards `edges`; leaf-only
+        self._held = threading.local()     # per-thread acquisition stack
+        self.edges: Dict[int, Dict[int, tuple]] = {}   # uid -> uid -> sites
+        self.sites: Dict[int, str] = {}    # uid -> creation site
+        self.acquisitions = 0
+
+    def _stack(self) -> list:
+        stack = getattr(self._held, "stack", None)
+        if stack is None:
+            stack = self._held.stack = []
+        return stack
+
+    def note_acquire(self, lock: "_TrackedLock") -> None:
+        stack = self._stack()
+        first = all(h is not lock for h in stack)
+        with self._mu:
+            self.acquisitions += 1
+            self.sites.setdefault(lock.uid, lock.site)
+            if first:                      # re-entry adds no ordering edge
+                for held in stack:
+                    if held is not lock:
+                        self.edges.setdefault(held.uid, {}).setdefault(
+                            lock.uid, (held.site, lock.site))
+        stack.append(lock)
+
+    def note_release(self, lock: "_TrackedLock") -> None:
+        stack = self._stack()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is lock:
+                del stack[i]
+                return
+
+    def cycle(self) -> Optional[List[str]]:
+        """A cycle as a list of creation sites, or None if acyclic."""
+        with self._mu:
+            adj = {a: sorted(bs) for a, bs in self.edges.items()}
+            sites = dict(self.sites)
+        state: Dict[int, int] = {}                    # 1 on stack, 2 done
+
+        def dfs(node: int, path: List[int]) -> Optional[List[int]]:
+            state[node] = 1
+            path.append(node)
+            for nxt in adj.get(node, ()):
+                if state.get(nxt, 0) == 1:
+                    return path[path.index(nxt):] + [nxt]
+                if state.get(nxt, 0) == 0:
+                    found = dfs(nxt, path)
+                    if found:
+                        return found
+            path.pop()
+            state[node] = 2
+            return None
+
+        for start in sorted(adj):
+            if state.get(start, 0) == 0:
+                found = dfs(start, [])
+                if found:
+                    return [sites.get(uid, f"lock#{uid}") for uid in found]
+        return None
+
+    def assert_acyclic(self) -> None:
+        cycle = self.cycle()
+        if cycle is not None:
+            raise AssertionError(
+                "dynamic lock-order cycle observed (threads acquired these "
+                "locks in conflicting orders — a deadlock schedule exists):\n  "
+                + "\n  -> ".join(cycle))
+
+
+class _TrackedLock:
+    """A Lock/RLock proxy that reports acquisitions to a graph.
+
+    Unintercepted attributes (`locked`, `_is_owned`, ...) delegate to the
+    real lock, so a tracked RLock still works as a Condition's lock: the
+    Condition's `acquire`/`release` calls land here, and its C-level
+    `_release_save`/`_acquire_restore` fallbacks resolve through
+    `__getattr__`.
+    """
+
+    _uid_mu = threading.Lock()
+    _uid_next = 0
+
+    def __init__(self, inner, graph: _LockOrderGraph, site: str) -> None:
+        self._inner = inner
+        self._graph = graph
+        self.site = site
+        with _TrackedLock._uid_mu:
+            _TrackedLock._uid_next += 1
+            self.uid = _TrackedLock._uid_next
+
+    def acquire(self, *args, **kwargs):
+        got = self._inner.acquire(*args, **kwargs)
+        if got:
+            self._graph.note_acquire(self)
+        return got
+
+    def release(self):
+        self._graph.note_release(self)
+        self._inner.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def __repr__(self):
+        return f"<_TrackedLock {self.site} wrapping {self._inner!r}>"
+
+
+class lock_order_watch:
+    """Patch `threading.Lock`/`RLock` so locks CREATED by serve modules
+    while the watch is active are tracked; everything else (jax, pytest,
+    stdlib internals, the harness itself) gets real locks.
+
+        with lock_order_watch() as watch:
+            ... run a chaos schedule ...
+        watch.assert_acyclic()
+
+    Pre-existing locks are untracked — enter the watch before building
+    the service/fleet under test.  The pytest hook in conftest.py does
+    exactly that for `chaos`-marked tests (and for everything when
+    LOCK_ORDER=1, how the CI chaos/soak jobs run).
+    """
+
+    def __init__(self, prefixes=("repro.serve",)) -> None:
+        self.prefixes = tuple(prefixes)
+        self.graph = _LockOrderGraph()
+        self._saved = None
+
+    def _wrap_factory(self, real):
+        prefixes = self.prefixes
+        graph = self.graph
+
+        def make(*args, **kwargs):
+            inner = real(*args, **kwargs)
+            frame = sys._getframe(1)
+            mod = frame.f_globals.get("__name__", "")
+            if any(mod == p or mod.startswith(p + ".") for p in prefixes):
+                site = f"{mod}:{frame.f_lineno} ({frame.f_code.co_name})"
+                return _TrackedLock(inner, graph, site)
+            return inner
+
+        return make
+
+    def __enter__(self) -> "lock_order_watch":
+        self._saved = (threading.Lock, threading.RLock)
+        threading.Lock = self._wrap_factory(self._saved[0])
+        threading.RLock = self._wrap_factory(self._saved[1])
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        threading.Lock, threading.RLock = self._saved
+        return False
+
+    def assert_acyclic(self) -> None:
+        self.graph.assert_acyclic()
