@@ -2,16 +2,19 @@
 
 CI runs `serve_latency.py --smoke --json serve_latency.json`, uploads
 the JSON as an artifact (the start of a perf trajectory across PRs), and
-then gates the metrics named in `benchmarks/baseline.json` — each entry
-is `{row name: {metric: ceiling-ish baseline value}}` and a measurement
-fails only past `factor` × baseline (default 2x: generous on purpose —
-shared CI runners are noisy; the gate exists to catch order-of-magnitude
-regressions like an accidental re-compile per request or a promote that
-stopped batching its RPCs, not 10% drift).  Only load-robust metrics
-belong in the baseline: the deadline row's p99 rides on real-clock
-scheduler wakeups and swings 10x with CPU contention (its behavior is
-asserted by `--smoke` instead), while pow2 p99, flip_ms, and
-failover_ms stay within ~2x under a fully loaded host.
+then gates the metrics named in `benchmarks/baseline.json`.  A baseline
+entry is either a bare number (a lower-is-better CEILING: fail past
+`factor` × baseline) or `{"value": v, "gate": "floor"|"ceiling"}` — a
+`floor` metric is higher-is-better (throughput, utilization) and fails
+BELOW baseline / `factor`.  The default 2x factor is generous on
+purpose — shared CI runners are noisy; the gate exists to catch
+order-of-magnitude regressions like an accidental re-compile per request
+or a kernel utilization collapsing to zero, not 10% drift.  Only
+load-robust metrics belong in the baseline: the deadline row's p99 rides
+on real-clock scheduler wakeups and swings 10x with CPU contention (its
+behavior is asserted by `--smoke` instead), while pow2 p99, flip_ms,
+failover_ms, and the kernels row's utilization_frac stay within ~2x
+under a fully loaded host.
 
 Measured rows/metrics with NO baseline entry are printed as
 "new row, no gate" / "new metric, no gate" — informational, never a
@@ -31,6 +34,26 @@ import json
 import sys
 
 
+def parse_gate(base) -> tuple:
+    """Baseline entry -> (value, direction).  Bare numbers keep the
+    historical lower-is-better ceiling; dict entries name their direction."""
+    if isinstance(base, dict):
+        direction = base.get("gate", "ceiling")
+        if direction not in ("floor", "ceiling"):
+            raise ValueError(f"unknown gate direction {direction!r}")
+        return float(base["value"]), direction
+    return float(base), "ceiling"
+
+
+def gate_ok(got: float, base: float, direction: str, factor: float) -> tuple:
+    """(passed, limit): ceiling fails past factor×base, floor below base/factor."""
+    if direction == "floor":
+        limit = base / factor
+        return got >= limit, limit
+    limit = factor * base
+    return got <= limit, limit
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("measured", help="JSON written by serve_latency --json")
@@ -41,12 +64,24 @@ def main() -> int:
                     help="`repro.analysis --format json` report; injected as "
                     "an 'analysis/findings' row so finding-count creep is "
                     "visible on the same trajectory as the latency rows")
+    ap.add_argument("--only", action="append", metavar="ROW",
+                    help="gate only these baseline rows (repeatable) — for "
+                    "runs that legitimately measure a subset, e.g. the "
+                    "kernels CI job gating serve_latency/kernels from a "
+                    "--backend pallas run that skips the fleet rows")
     args = ap.parse_args()
 
     with open(args.measured) as f:
         measured = {row["name"]: row for row in json.load(f)}
     with open(args.baseline) as f:
         baseline = json.load(f)
+    if args.only:
+        unknown = sorted(set(args.only) - set(baseline))
+        if unknown:
+            print(f"--only names absent from baseline: {unknown}",
+                  file=sys.stderr)
+            return 2
+        baseline = {k: v for k, v in baseline.items() if k in args.only}
 
     if args.analysis:
         with open(args.analysis) as f:
@@ -71,21 +106,24 @@ def main() -> int:
             failures.append(f"{name}: row missing from measured output")
             print(f"{name:<40} {'-':<14} {'MISSING':>12}")
             continue
-        for metric, base in sorted(metrics.items()):
+        for metric, base_entry in sorted(metrics.items()):
             got = row.get(metric)
             if got is None or not isinstance(got, (int, float)):
                 failures.append(f"{name}: metric {metric!r} missing")
                 print(f"{name:<40} {metric:<14} {'MISSING':>12}")
                 continue
-            limit = args.factor * float(base)
-            ok = float(got) <= limit
-            print(f"{name:<40} {metric:<14} {float(got):>12.2f} "
-                  f"{float(base):>12.2f} {limit:>12.2f}  "
-                  f"{'ok' if ok else 'REGRESSION'}")
+            base, direction = parse_gate(base_entry)
+            ok, limit = gate_ok(float(got), base, direction, args.factor)
+            verdict = "ok" if ok else "REGRESSION"
+            if direction == "floor":
+                verdict += " (floor)" if ok else ""
+            print(f"{name:<40} {metric:<14} {float(got):>12.4f} "
+                  f"{base:>12.4f} {limit:>12.4f}  {verdict}")
             if not ok:
+                cmp = "<" if direction == "floor" else ">"
                 failures.append(
-                    f"{name}.{metric} = {got:.2f} > {args.factor:g}x "
-                    f"baseline {base:.2f}")
+                    f"{name}.{metric} = {got:.4f} {cmp} {direction} limit "
+                    f"{limit:.4f} ({args.factor:g}x of baseline {base:.4f})")
     # rows/metrics measured but absent from the baseline are REPORTED,
     # never gated and never silently dropped: a freshly added benchmark
     # row shows up here on its first CI run, and committing a baseline

@@ -21,6 +21,24 @@ each bucket policy:
 A train-while-serve row exercises the full register → serve_and_update →
 promote → transform round trip on the same stream.
 
+`--backend pallas` reruns the backend-dependent rows (pow2, train-while-
+serve) with the model registered under `Execution(backend="pallas")` —
+the bucketed transform dispatches to the fused pad+project+whiten Pallas
+kernel and the streamed updates to `kernels.ops.easi_update`, autotuned
+per bucket at register time.  Those rows are suffixed `@pallas` so the
+XLA baselines don't mis-gate them; the exact/deadline and fleet rows are
+backend-independent and are skipped.
+
+A kernels row (emitted under EVERY backend flag) is the roofline judge:
+it serves bucket-shaped batches through an autotuned pallas service,
+converts best-of wall times to achieved FLOP/s (model FLOPs: 2mp + 2pn
+per row — the paper's project-then-whiten datapath), and reports
+`utilization_frac` against `repro.launch.roofline.device_peak_flops()`
+(datasheet peak on TPU, measured dense-matmul peak elsewhere).  That
+metric is FLOOR-gated in `benchmarks/baseline.json`: a broken kernel
+dispatch or a silent fall-back to per-row serving shows up as
+utilization collapsing toward zero.
+
 A replicated-promote row runs a 3-host `LocalBus` fleet (one leader +
 two follower `ReplicatedRegistry`s, each behind its own `DRService`) and
 measures the two-phase flip: `flip_ms` is time-to-consistency (promote
@@ -65,16 +83,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.execution import Execution
 from repro.dr import DRModel, EASIStage, RPStage
+from repro.launch import roofline
 from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, Elector,
                          LocalBus, ReplicatedRegistry, ReplicationError,
                          state_hash)
 from repro.serve.batching import EXACT
 
 
-def _model(m=32, p=16, n=8, block=8):
+def _model(m=32, p=16, n=8, block=8, backend="xla"):
     return DRModel(stages=(RPStage(m, p), EASIStage.rotation(p, n, mu=5e-4)),
-                   block_size=block)
+                   execution=Execution(backend=backend), block_size=block)
 
 
 def _requests(n_req: int, m: int, *, seed: int = 0, max_rows: int = 48):
@@ -118,10 +138,11 @@ def _drive(svc: DRService, name: str, reqs, window: int, *,
     return np.asarray(lat), time.perf_counter() - t_start
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, backend: str = "xla"):
     n_req = 64 if fast else 512
     window = 8
-    model = _model()
+    suffix = "" if backend == "xla" else f"@{backend}"
+    model = _model(backend=backend)
     state = model.init(jax.random.PRNGKey(0))
     reqs = _requests(n_req, model.in_dim)
     total_rows = int(sum(r.shape[0] for r in reqs))
@@ -130,6 +151,12 @@ def run(fast: bool = True):
     policies = (("pow2", BucketPolicy(min_bucket=4, max_bucket=64)),
                 ("exact", EXACT),
                 ("deadline", BucketPolicy(min_bucket=4, max_bucket=64)))
+    if suffix:
+        # non-default backends rerun only the backend-dependent rows: exact
+        # compiles one interpret-mode kernel per distinct request size (an
+        # unbounded universe — pointless and slow), and the deadline row is
+        # a real-clock scheduler benchmark, independent of the datapath
+        policies = policies[:1]
     for tag, policy in policies:
         direct = policy.exact
         svc = DRService(buckets=policy, compile_cache_size=128)
@@ -155,7 +182,7 @@ def run(fast: bool = True):
             derived += (f";deadline_miss_rate="
                         f"{missed / max(1, got + missed):.3f}")
             sched.shutdown()
-        rows.append((f"serve_latency/{tag}", p50 * 1e6, derived))
+        rows.append((f"serve_latency/{tag}{suffix}", p50 * 1e6, derived))
 
     # train-while-serve: the full round trip on the same stream
     svc = DRService(buckets=BucketPolicy(min_bucket=4, max_bucket=64))
@@ -170,10 +197,16 @@ def run(fast: bool = True):
     v = svc.promote("dr")
     y = svc.transform("dr", reqs[0])
     assert bool(jnp.isfinite(y).all()) and v == 1
-    rows.append(("serve_latency/train_while_serve",
+    rows.append((f"serve_latency/train_while_serve{suffix}",
                  wall / max(1, len(blocks)) * 1e6,
                  f"blocks={len(blocks)};promoted_version={v};"
                  f"updates={svc.metrics()['updates_applied']['dr']}"))
+
+    # the roofline judge rides every backend flag: it builds its own
+    # pallas service either way (gated by the same floor in baseline.json)
+    rows.append(_kernels_row(fast))
+    if suffix:
+        return rows     # fleet + durability rows are backend-independent
 
     # replicated promote: 3-host fleet, two-phase flip under live traffic
     bus = LocalBus()
@@ -297,6 +330,48 @@ def run(fast: bool = True):
     return rows
 
 
+def _kernels_row(fast: bool):
+    """Roofline judge (EXPERIMENTS.md §Kernels): achieved FLOP/s of the
+    autotuned fused serve transform per bucket vs the device peak.
+
+    Model FLOPs per served row are the paper datapath's useful work —
+    2mp (ternary project) + 2pn (whiten/rotate map) — the same
+    model-vs-achieved accounting as SNIPPETS.md's MODEL_FLOPS_PER_SAMPLE
+    tables.  `utilization_frac` is the best bucket's achieved/peak; it is
+    floor-gated so a dispatch that silently stops reaching the kernel (or
+    an autotuner that stops running) fails CI rather than flattering it."""
+    m, p, n = 32, 16, 8
+    model = _model(m, p, n, backend="pallas")
+    state = model.init(jax.random.PRNGKey(0))
+    buckets = (16, 64) if fast else (16, 64, 256)
+    svc = DRService(buckets=BucketPolicy(min_bucket=buckets[0],
+                                         max_bucket=buckets[-1]),
+                    compile_cache_size=64)
+    svc.register("dr", model, state)            # register-time tile sweep
+    flops_per_row = 2 * m * p + 2 * p * n
+    peak, peak_src = roofline.device_peak_flops()
+    rng = np.random.RandomState(0)
+    best_util, parts, t_best = 0.0, [], float("inf")
+    for b in buckets:
+        x = jnp.asarray(rng.randn(b, m).astype(np.float32))
+        jax.block_until_ready(svc.transform("dr", x))       # warm
+        t_best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(svc.transform("dr", x))
+            t_best = min(t_best, time.perf_counter() - t0)
+        achieved = b * flops_per_row / t_best
+        best_util = max(best_util, achieved / peak)
+        parts.append(f"gflops_b{b}={achieved / 1e9:.4f}")
+    derived = (";".join(parts)
+               + f";utilization_frac={best_util:.6f}"
+               f";peak_gflops={peak / 1e9:.1f};peak_src={peak_src}"
+               f";autotunes={svc.metrics()['autotunes']}"
+               f";flops_per_row={flops_per_row}"
+               f";platform={jax.default_backend()}")
+    return ("serve_latency/kernels", t_best * 1e6, derived)
+
+
 def _parse_derived(derived: str):
     out = {}
     for kv in derived.split(";"):
@@ -318,9 +393,13 @@ def main():
     ap.add_argument("--json", metavar="PATH",
                     help="also write machine-readable rows (CI artifact + "
                          "regression gate input)")
+    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
+                    help="Execution backend the served model registers "
+                         "with; pallas reruns the backend-dependent rows "
+                         "through the fused kernels (rows suffixed @pallas)")
     args = ap.parse_args()
 
-    rows = run(fast=not args.full)
+    rows = run(fast=not args.full, backend=args.backend)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -332,36 +411,47 @@ def main():
         print(f"wrote {args.json} ({len(payload)} rows)")
 
     if args.smoke:
+        sfx = "" if args.backend == "xla" else f"@{args.backend}"
         by = {n: d for n, _, d in rows}
-        pow2_compiles = int(by["serve_latency/pow2"].split("compiles=")[1].split(";")[0])
-        exact_compiles = int(by["serve_latency/exact"].split("compiles=")[1].split(";")[0])
-        ddl_compiles = int(by["serve_latency/deadline"].split("compiles=")[1].split(";")[0])
-        # the bucketed compile universe must be tiny and beat exact shapes
+        pow2_compiles = int(by[f"serve_latency/pow2{sfx}"]
+                            .split("compiles=")[1].split(";")[0])
+        # the bucketed compile universe must be tiny — for pallas that
+        # includes the register-time autotuned bucket programs
         assert pow2_compiles <= 6, pow2_compiles
-        assert pow2_compiles < exact_compiles, (pow2_compiles, exact_compiles)
-        # deadline flushes reuse the same bucketed programs — no new compiles
-        assert ddl_compiles <= 6, ddl_compiles
-        # miss = flush STARTED past the budget; a scheduler that only ever
-        # drains at shutdown would miss everything — that must not pass
-        miss = float(by["serve_latency/deadline"]
-                     .split("deadline_miss_rate=")[1].split(";")[0])
-        assert 0.0 <= miss < 1.0, miss
-        assert "promoted_version=1" in by["serve_latency/train_while_serve"]
-        # the fleet flip must end uniformly on the new version — a mixed
-        # final epoch means the two-phase promote tore the deployment
-        assert "final_versions=1/1/1" in by["serve_latency/replicated_promote"]
-        # failover: both SURVIVING hosts must be uniformly on the promoted
-        # version, flipped by a leader elected at a real (>0) term
-        assert "final_versions=1/1" in by["serve_latency/failover"]
-        assert int(by["serve_latency/failover"]
-                   .split("term=")[1].split(";")[0]) >= 1
-        # durability: the cold restart must come back on the promoted
-        # version (the content-hash identity is asserted inside run())
-        dur = by["serve_latency/durability"]
-        n_states = int(dur.split("versions=")[1].split(";")[0])
-        restored = int(dur.split("restored_version=")[1].split(";")[0])
-        assert restored == n_states - 1, (restored, n_states)
-        assert int(dur.split("snapshot_bytes=")[1].split(";")[0]) > 0
+        assert "promoted_version=1" in by[f"serve_latency/train_while_serve{sfx}"]
+        # the roofline judge must have measured real kernel utilization
+        # through an autotuned service — zero means the dispatch is broken
+        kd = by["serve_latency/kernels"]
+        util = float(kd.split("utilization_frac=")[1].split(";")[0])
+        assert util > 0.0, kd
+        assert int(kd.split("autotunes=")[1].split(";")[0]) >= 1, kd
+        if not sfx:
+            exact_compiles = int(by["serve_latency/exact"].split("compiles=")[1].split(";")[0])
+            ddl_compiles = int(by["serve_latency/deadline"].split("compiles=")[1].split(";")[0])
+            # bucketing must beat exact shapes
+            assert pow2_compiles < exact_compiles, (pow2_compiles, exact_compiles)
+            # deadline flushes reuse the same bucketed programs — no new compiles
+            assert ddl_compiles <= 6, ddl_compiles
+            # miss = flush STARTED past the budget; a scheduler that only ever
+            # drains at shutdown would miss everything — that must not pass
+            miss = float(by["serve_latency/deadline"]
+                         .split("deadline_miss_rate=")[1].split(";")[0])
+            assert 0.0 <= miss < 1.0, miss
+            # the fleet flip must end uniformly on the new version — a mixed
+            # final epoch means the two-phase promote tore the deployment
+            assert "final_versions=1/1/1" in by["serve_latency/replicated_promote"]
+            # failover: both SURVIVING hosts must be uniformly on the promoted
+            # version, flipped by a leader elected at a real (>0) term
+            assert "final_versions=1/1" in by["serve_latency/failover"]
+            assert int(by["serve_latency/failover"]
+                       .split("term=")[1].split(";")[0]) >= 1
+            # durability: the cold restart must come back on the promoted
+            # version (the content-hash identity is asserted inside run())
+            dur = by["serve_latency/durability"]
+            n_states = int(dur.split("versions=")[1].split(";")[0])
+            restored = int(dur.split("restored_version=")[1].split(";")[0])
+            assert restored == n_states - 1, (restored, n_states)
+            assert int(dur.split("snapshot_bytes=")[1].split(";")[0]) > 0
         print("SERVE_LATENCY_SMOKE_OK")
 
 

@@ -175,7 +175,8 @@ def easi_fit(
         from repro.kernels import ops as kops
 
         def body(b_mat, blk):
-            return kops.easi_update(b_mat, blk, cfg, block_m=exe.easi_block_m), None
+            return kops.easi_update(b_mat, blk, cfg, block_m=exe.easi_block_m,
+                                    execution=exe), None
     else:
         def body(b_mat, blk):
             b_new, _ = easi_step(b_mat, blk, cfg)

@@ -12,16 +12,45 @@ call in `easi.py` / `dr_unit.py` / `pipeline.py`:
 Block sizes are the kernel tile shapes (multiples of the MXU/VPU tiles —
 128 lanes; see the Pallas guide's tiling table); `dtype` is the compute
 dtype stages inherit unless they pin their own.
+
+`interpret` pins the Pallas execution mode: True forces interpret (kernel
+body as traced jax ops — correct on any backend), False forces Mosaic
+compilation (TPU only), None resolves it ONCE per process from the default
+jax backend.  The resolved value is threaded into the kernel wrappers as an
+explicit static `interpret=` argument, so the hot path never probes
+`jax.default_backend()` per call — and a policy built after a backend
+change carries its own mode instead of inheriting a stale first-trace one.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Optional
 
 import jax.numpy as jnp
 
 BACKENDS = ("xla", "pallas")
+
+
+@functools.lru_cache(maxsize=1)
+def _probe_interpret() -> bool:
+    """One process-wide probe of the default backend (TPU compiles Mosaic,
+    everything else interprets).  Cached so the answer is resolved once —
+    policy construction and kernel dispatch never re-probe."""
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool] = None,
+                      execution: Optional["Execution"] = None) -> bool:
+    """Resolution order: explicit call-site pin > policy pin > cached probe."""
+    if interpret is not None:
+        return bool(interpret)
+    if execution is not None and execution.interpret is not None:
+        return bool(execution.interpret)
+    return _probe_interpret()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +63,10 @@ class Execution:
     # fused EASI-update kernel: sample-block tile
     easi_block_m: int = 512
     dtype: Any = jnp.float32
+    # Pallas mode: True = interpret, False = Mosaic, None = probe once
+    # (lazily, so building the module-level XLA/PALLAS constants does not
+    # initialize a jax backend at import time)
+    interpret: Optional[bool] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -45,6 +78,11 @@ class Execution:
     @property
     def use_kernel(self) -> bool:
         return self.backend == "pallas"
+
+    def resolved_interpret(self) -> bool:
+        """The interpret= value the kernel wrappers run with under this
+        policy (the pinned value, or the cached process-wide probe)."""
+        return resolve_interpret(None, self)
 
 
 XLA = Execution(backend="xla")

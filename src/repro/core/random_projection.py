@@ -134,7 +134,7 @@ def apply_rp(r_int8: jax.Array, x: jax.Array, cfg: RPConfig, *,
 
         y = kops.ternary_matmul(x2, r_int8, scale=cfg.scale,
                                 block_m=exe.tmm_block_m, block_p=exe.tmm_block_p,
-                                block_k=exe.tmm_block_k)
+                                block_k=exe.tmm_block_k, execution=exe)
     else:
         y = _apply_dense(r_int8, x2, cfg.scale)
     return y.reshape(x.shape[:-1] + (cfg.p,))

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.execution import Execution
-from repro.dr.stages import EASIStage, RPStage, Stage
+from repro.dr.stages import EASIStage, RPStage, Stage, fused_pair_transform
 
 PyTree = Any
 
@@ -172,10 +172,26 @@ class DRModel:
 
     # ---- inference ---------------------------------------------------------
     def transform(self, state: ModelState, x: jax.Array) -> jax.Array:
-        """x (..., m) → reduced features (..., n)."""
+        """x (..., m) → reduced features (..., n).
+
+        Under the pallas backend every adjacent RPStage→EASIStage pair
+        dispatches to the fused pad+project+whiten kernel (one Pallas call
+        instead of two HBM-round-tripping matmuls); remaining stages run
+        stage-wise.  The XLA backend is the stage-wise reference path."""
+        exe = self.execution
         h = x
-        for stage, s in zip(self.stages, state.stages):
-            h = stage.transform(s, h, self.execution)
+        i, n = 0, len(self.stages)
+        while i < n:
+            stage = self.stages[i]
+            if (exe.use_kernel and i + 1 < n and isinstance(stage, RPStage)
+                    and isinstance(self.stages[i + 1], EASIStage)):
+                h = fused_pair_transform(stage, self.stages[i + 1],
+                                         state.stages[i], state.stages[i + 1],
+                                         h, exe)
+                i += 2
+                continue
+            h = stage.transform(state.stages[i], h, exe)
+            i += 1
         return h
 
     # ---- streaming training ------------------------------------------------

@@ -175,7 +175,8 @@ class EASIStage:
         if exe.use_kernel:
             from repro.kernels import ops as kops
 
-            return kops.easi_update(state, x, cfg, block_m=exe.easi_block_m)
+            return kops.easi_update(state, x, cfg, block_m=exe.easi_block_m,
+                                    execution=exe)
         b_new, _ = easi_mod.easi_step(state, x, cfg)
         return b_new
 
@@ -199,3 +200,31 @@ class EASIStage:
 
     def shard_spec(self, mesh: Optional[Mesh]) -> P:
         return P(None, None)  # B (n, m): small — replicate
+
+
+# ---------------------------------------------------------------------------
+# fused RP→EASI serve transform
+# ---------------------------------------------------------------------------
+
+def fused_pair_transform(rp: RPStage, easi: EASIStage,
+                         r_state: jax.Array, b_state: jax.Array,
+                         x: jax.Array, exe: Execution) -> jax.Array:
+    """Project-then-whiten x (…, m) → (…, n) through ONE Pallas call.
+
+    Under the pallas backend an adjacent RPStage→EASIStage pair in a
+    cascade collapses into `kernels.fused_transform`: the ternary matmul
+    and the adaptive stage's linear map run in a single VMEM-resident
+    pass (the (…, p) intermediate never reaches HBM).  Semantically
+    identical to `rp.transform` followed by `easi.transform` — EASI's
+    deployment transform is x @ Bᵀ regardless of the update flags, so all
+    three personalities (whiten / rotation / full) fuse the same way.
+    """
+    cfg = rp.rp_cfg(exe)
+    from repro.kernels import ops as kops
+
+    x2 = x.reshape((-1, cfg.m)).astype(cfg.dtype)
+    y = kops.fused_transform(
+        x2, r_state, b_state, scale=cfg.scale,
+        block_m=exe.tmm_block_m, block_p=exe.tmm_block_p,
+        block_k=exe.tmm_block_k, execution=exe)
+    return y.reshape(x.shape[:-1] + (easi.n,))

@@ -2,13 +2,18 @@
 
 The paper's contribution IS a datapath optimization, so this layer is real:
   ternary_matmul  — int8 ternary RP matmul (HBM-traffic-optimal RP stage)
+  fused_transform — fused pad+project+whiten serve transform: (scale·xRᵀ)Bᵀ
+                    in one VMEM-resident pass (the bucketed serving hot path)
   easi_update     — fused EASI relative-gradient + weight update
   flash_attention — flash forward (causal/SWA/GQA); kills the S² softmax-tile
                     HBM traffic that dominates T_mem in the roofline tables
-  ops             — jitted wrappers (interpret=True off-TPU)
+  autotune        — per-(bucket, device) tile sweep; winners cached beside
+                    the compiled program in the serving compile cache
+  ops             — jitted wrappers (interpret mode resolved by the
+                    Execution policy, never probed per call)
   ref             — pure-jnp oracles
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["autotune", "ops", "ref"]

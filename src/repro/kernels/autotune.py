@@ -1,0 +1,133 @@
+"""Tile-size autotuner for the serving Pallas kernels.
+
+`DRService` calls this once per (bucket, device) at registry-register time:
+sweep the kernel tile knobs (`block_m`/`block_p`/`block_k`), time each
+candidate program on a bucket-shaped dummy batch, keep the winner.  The
+returned `TunedProgram` (compiled callable + winning tiles) is what the
+engine stores in its `BoundedCompileCache`, so a promote (same config
+hash → same cache key) never re-tunes and an eviction drops the program
+and its tiles together.
+
+Design constraints, in order:
+  * Candidates are DEDUPED by their *effective* tile shapes — the kernels
+    clamp every block to the padded problem dims, so at paper scale
+    (m=32, p=16, buckets ≤ 1024) most of the sweep collapses to one
+    program and tuning is free (no timing, no extra compiles).
+  * Timing uses an injected ms timer (the service's `Clock`), never
+    `time.*` directly — under a `VirtualClock` every candidate ties and
+    the FIRST candidate (the model's own `Execution` tiles) wins
+    deterministically.
+  * Candidate programs are built directly (not through the compile
+    cache), so loser programs are dropped on return and cache compile
+    counters keep meaning "programs the service retained".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import jax
+
+# Sweep universes: MXU/VPU-aligned tile sizes worth racing.  Small by
+# design — the effective-shape dedupe below does the real pruning.
+BLOCK_M_CANDIDATES = (64, 128, 256, 512)
+BLOCK_P_CANDIDATES = (128, 256)
+BLOCK_K_CANDIDATES = (128, 256, 512)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One (block_m, block_p, block_k) point of the sweep."""
+
+    block_m: int = 128
+    block_p: int = 128
+    block_k: int = 512
+
+    def effective(self, rows: int, p: int, m: int) -> "TileConfig":
+        """The tile shapes the kernel actually runs after clamping to the
+        padded problem dims (mirrors the clamp in the kernel wrappers)."""
+        return TileConfig(
+            block_m=min(self.block_m, _round_up(rows, 8)),
+            block_p=min(self.block_p, _round_up(p, 128)),
+            block_k=min(self.block_k, _round_up(m, 128)))
+
+
+def candidates(rows: int, p: int, m: int, *,
+               first: TileConfig = None,
+               block_m: Sequence[int] = BLOCK_M_CANDIDATES,
+               block_p: Sequence[int] = BLOCK_P_CANDIDATES,
+               block_k: Sequence[int] = BLOCK_K_CANDIDATES,
+               ) -> Tuple[TileConfig, ...]:
+    """The deduped sweep for a (rows, p, m) problem.  `first` (typically
+    the model's own Execution tiles) is tried before the universe, so a
+    hand-tiled policy survives a tie and a collapsed sweep returns it."""
+    seen, out = set(), []
+    pool = ([] if first is None else [first]) + [
+        TileConfig(bm, bp, bk)
+        for bm in block_m for bp in block_p for bk in block_k]
+    for cand in pool:
+        eff = cand.effective(rows, p, m)
+        if eff in seen:
+            continue
+        seen.add(eff)
+        out.append(cand)
+    return tuple(out)
+
+
+def device_key() -> str:
+    """Identity of the device programs are tuned FOR (part of what a cached
+    winner is valid against)."""
+    d = jax.devices()[0]
+    return f"{d.platform}:{getattr(d, 'device_kind', 'unknown')}"
+
+
+@dataclasses.dataclass
+class TunedProgram:
+    """A compiled program plus the tile choice that won its sweep — cached
+    as ONE value, so the winner can never outlive (or be re-derived apart
+    from) the program it was tuned for."""
+
+    fn: Callable[..., Any]
+    tiles: TileConfig
+    device: str
+    timings_ms: Dict[TileConfig, float]
+
+    def __call__(self, *args: Any, **kw: Any) -> Any:
+        return self.fn(*args, **kw)
+
+
+def tune(cands: Sequence[TileConfig],
+         build: Callable[[TileConfig], Callable[..., Any]],
+         args: Tuple[Any, ...],
+         *,
+         timer: Callable[[], float],
+         reps: int = 2) -> TunedProgram:
+    """Race `build(tiles)(*args)` across candidates; best-of-`reps` with the
+    injected ms `timer` decides.  Ties keep the earliest candidate, so a
+    zero-elapsed virtual clock is deterministic.  A single-candidate sweep
+    skips timing entirely (the program still compiles lazily on first use)."""
+    if not cands:
+        raise ValueError("tune needs at least one candidate")
+    if len(cands) == 1:
+        return TunedProgram(fn=build(cands[0]), tiles=cands[0],
+                            device=device_key(), timings_ms={})
+    best = None
+    timings: Dict[TileConfig, float] = {}
+    for cand in cands:
+        fn = build(cand)
+        jax.block_until_ready(fn(*args))        # compile + warm, untimed
+        t_best = float("inf")
+        for _ in range(max(1, reps)):
+            t0 = timer()
+            jax.block_until_ready(fn(*args))
+            t_best = min(t_best, timer() - t0)
+        timings[cand] = t_best
+        if best is None or t_best < best[0]:
+            best = (t_best, cand, fn)
+    return TunedProgram(fn=best[2], tiles=best[1], device=device_key(),
+                        timings_ms=timings)

@@ -1,31 +1,52 @@
 """Jitted public wrappers around the Pallas kernels.
 
 On CPU (this container) kernels run in `interpret=True` mode — the kernel
-body executes in Python with the exact same tiling/indexing as on TPU, which
-is what the per-kernel allclose sweeps validate.  On a real TPU backend the
-same call sites compile to Mosaic.
+body executes as traced jax ops with the exact same tiling/indexing as on
+TPU, which is what the per-kernel allclose sweeps validate.  On a real TPU
+backend the same call sites compile to Mosaic.
+
+The interpret/Mosaic decision is NOT probed per call: it is resolved by
+`repro.core.execution.resolve_interpret` — an explicit `interpret=` pin
+wins, else the `Execution` policy's pin, else one cached process-wide
+probe of the default backend.  The old per-call `jax.default_backend()`
+probe got baked into jit static args at first trace, so a backend change
+after that trace could serve a stale-mode kernel; a policy-resolved value
+travels with the model instead.
 """
 
 from __future__ import annotations
 
-import jax
+from typing import Optional
 
+from repro.core.execution import Execution, resolve_interpret
 from repro.kernels import easi_update as _easi_kernel
+from repro.kernels import fused_transform as _fused_kernel
 from repro.kernels import ternary_matmul as _tmm_kernel
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def ternary_matmul(x, r_int8, *, scale: float = 1.0, block_m=128, block_p=128, block_k=512):
+def ternary_matmul(x, r_int8, *, scale: float = 1.0, block_m=128, block_p=128,
+                   block_k=512, interpret: Optional[bool] = None,
+                   execution: Optional[Execution] = None):
     return _tmm_kernel.ternary_matmul(
         x, r_int8, scale=scale, block_m=block_m, block_p=block_p, block_k=block_k,
-        interpret=_interpret(),
+        interpret=resolve_interpret(interpret, execution),
     )
 
 
-def easi_apply(b_mat, y, cfg, *, block_m: int = 512):
+def fused_transform(x, r_int8, b_mat, *, scale: float = 1.0, block_m=128,
+                    block_p=128, block_k=512, interpret: Optional[bool] = None,
+                    execution: Optional[Execution] = None):
+    """Fused pad+project+whiten: (scale · x Rᵀ) Bᵀ in one VMEM-resident pass
+    (the bucketed serve-transform hot path)."""
+    return _fused_kernel.fused_transform(
+        x, r_int8, b_mat, scale=scale, block_m=block_m, block_p=block_p,
+        block_k=block_k, interpret=resolve_interpret(interpret, execution),
+    )
+
+
+def easi_apply(b_mat, y, cfg, *, block_m: int = 512,
+               interpret: Optional[bool] = None,
+               execution: Optional[Execution] = None):
     """Apply one EASI update given precomputed outputs y (b, n)."""
     if cfg.normalized:
         # The normalized variant divides by data-dependent scalars; keep it on
@@ -37,21 +58,28 @@ def easi_apply(b_mat, y, cfg, *, block_m: int = 512):
     return _easi_kernel.easi_apply(
         b_mat, y,
         mu=cfg.mu, second_order=cfg.second_order, higher_order=cfg.higher_order,
-        g_name=cfg.g, block_m=block_m, interpret=_interpret(),
+        g_name=cfg.g, block_m=block_m,
+        interpret=resolve_interpret(interpret, execution),
     )
 
 
-def easi_update(b_mat, h_block, cfg, *, block_m: int = 512):
+def easi_update(b_mat, h_block, cfg, *, block_m: int = 512,
+                interpret: Optional[bool] = None,
+                execution: Optional[Execution] = None):
     """Full fused step: y = h Bᵀ (XLA matmul) then fused gradient+update."""
     y = h_block.astype(b_mat.dtype) @ b_mat.T
-    return easi_apply(b_mat, y, cfg, block_m=block_m)
+    return easi_apply(b_mat, y, cfg, block_m=block_m, interpret=interpret,
+                      execution=execution)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, q_chunk=512,
-                    kv_chunk=512, q_offset=0):
+                    kv_chunk=512, q_offset=0,
+                    interpret: Optional[bool] = None,
+                    execution: Optional[Execution] = None):
     """Flash forward on TPU (Mosaic); interpret-mode elsewhere (tests)."""
     from repro.kernels.flash_attention import flash_attention_fwd
 
     return flash_attention_fwd(
         q, k, v, causal=causal, window=window, q_chunk=q_chunk,
-        kv_chunk=kv_chunk, q_offset=q_offset, interpret=_interpret())
+        kv_chunk=kv_chunk, q_offset=q_offset,
+        interpret=resolve_interpret(interpret, execution))

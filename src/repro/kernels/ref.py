@@ -17,6 +17,20 @@ def ternary_matmul_ref(x: jax.Array, r_int8: jax.Array, *, scale: float = 1.0) -
     return y.astype(x.dtype)
 
 
+def fused_transform_ref(x: jax.Array, r_int8: jax.Array, b_mat: jax.Array,
+                        *, scale: float = 1.0) -> jax.Array:
+    """out (b, n) = (scale * x @ rᵀ) @ bᵀ — the project-then-whiten serve
+    transform as two plain dots with f32 accumulation (ground truth for
+    the fused pad+project+whiten kernel)."""
+    y = ternary_matmul_ref(x, r_int8, scale=scale).astype(jnp.float32)
+    out = jax.lax.dot_general(
+        y, b_mat.astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(b_mat.dtype)
+
+
 def easi_apply_ref(
     b_mat: jax.Array,
     y: jax.Array,

@@ -18,7 +18,14 @@ deployment; this is that story at service level.  One `DRService` owns:
     of it) through `model.update` into a STAGED state; `promote()` makes
     the staged state live, `rollback()` reverts.  Streaming every block
     through `serve_and_update` then promoting reproduces an offline
-    `model.fit` with the same block order — tests pin that equivalence.
+    `model.fit` with the same block order — tests pin that equivalence;
+  * the Execution fast path — a model registered with
+    `Execution(backend="pallas")` serves its bucketed transform through
+    the fused pad+project+whiten kernel and folds streamed traffic
+    through `kernels.ops.easi_update` (both via the model's own
+    dispatch), with kernel tiles autotuned per (bucket, device) at
+    register time (`repro.kernels.autotune`); the tuned winner is cached
+    beside the compiled program in the bounded compile cache.
 
 Typical use:
 
@@ -45,6 +52,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.kernels import autotune
 from repro.serve import dr_serve, serve_step
 from repro.serve.batching import (BoundedCompileCache, BucketPolicy,
                                   MicroBatcher, Ticket)
@@ -141,6 +149,7 @@ class DRService:
         self.served_rows = 0                        # guarded-by: _metrics_lock
         self.padded_rows = 0                        # guarded-by: _metrics_lock
         self.batches_run = 0                        # guarded-by: _metrics_lock
+        self.autotunes = 0                          # guarded-by: _metrics_lock
 
     def _tws_lock(self, name: str) -> threading.Lock:
         with self._tws_guard:
@@ -152,8 +161,22 @@ class DRService:
     # ---- registry facade ---------------------------------------------------
     def register(self, name: str, model: Any, state: PyTree, *,
                  ensemble: Optional[int] = None, replace: bool = False) -> int:
-        return self.registry.register(name, model, state, ensemble=ensemble,
-                                      replace=replace)
+        v = self.registry.register(name, model, state, ensemble=ensemble,
+                                   replace=replace)
+        # Registry-register time is when a pallas model's bucket programs
+        # get their tile sweep: tune every bucket of the policy now (the
+        # winners land in the compile cache keyed by config hash + bucket),
+        # so the first real request pays neither tuning nor tile regret.
+        # A later promote reuses these entries (same config hash); only an
+        # eviction — which drops program AND tiles together — re-tunes.
+        exe = getattr(model, "execution", None)
+        if (ensemble is None and self.mesh is None and exe is not None
+                and getattr(exe, "use_kernel", False)):
+            snap = self.registry.get(name)
+            dtype = jnp.dtype(exe.dtype)
+            for b in self.buckets.buckets():    # empty for EXACT policies
+                self._transform_fn(snap, b, dtype)
+        return v
 
     def promote(self, name: str, version: Optional[int] = None) -> int:
         """Make a state version live.  With no explicit `version`, promotes
@@ -451,6 +474,7 @@ class DRService:
             served = self.served_rows
             padded = self.padded_rows
             batches = self.batches_run
+            autotunes = self.autotunes
         with self._tws_guard:
             updates = dict(self._updates)
             staged = sorted(self._staged)
@@ -458,6 +482,7 @@ class DRService:
             "served_rows": served,
             "padded_rows": padded,
             "batches_run": batches,
+            "autotunes": autotunes,
             "updates_applied": updates,
             "staged": staged,
             "compile_cache": self.cache.stats(),
@@ -504,11 +529,48 @@ class DRService:
                 return dr_serve.make_dr_transform(
                     snap.model, self.mesh, batch_size=bucket,
                     ensemble=snap.ensemble)
-            fn = snap.model.ensemble(snap.ensemble).transform \
-                if snap.ensemble else snap.model.transform
-            return jax.jit(fn)
+            if snap.ensemble:
+                return jax.jit(snap.model.ensemble(snap.ensemble).transform)
+            exe = getattr(snap.model, "execution", None)
+            if exe is not None and getattr(exe, "use_kernel", False):
+                return self._tuned_transform(snap.model, snap.state,
+                                             bucket, dtype)
+            return jax.jit(snap.model.transform)
 
         return self.cache.get_or_build(key, build)
+
+    def _tuned_transform(self, model: Any, state: PyTree, bucket: int, dtype):
+        """Sweep the Pallas tile knobs for this (bucket, device) and return
+        the winning jitted bucket program.  The returned `TunedProgram`
+        carries the winning `TileConfig` alongside the compiled callable,
+        and it is THE value cached under the transform key — a promote
+        (same config hash) hits the cache and never re-tunes, an eviction
+        drops the program and its tiles in one step, and a post-eviction
+        rebuild runs the sweep again."""
+        stages = getattr(model, "stages", None)
+        if not stages:                      # no tile surface to tune
+            return jax.jit(model.transform)
+        exe = model.execution
+        # the leading matmul's dims bound the effective tile shapes; the
+        # policy's own tiles race first so a hand-tiled Execution wins ties
+        cands = autotune.candidates(
+            bucket, stages[0].out_dim, model.in_dim,
+            first=autotune.TileConfig(exe.tmm_block_m, exe.tmm_block_p,
+                                      exe.tmm_block_k))
+
+        def build_candidate(tiles: autotune.TileConfig):
+            exe2 = dataclasses.replace(
+                exe, tmm_block_m=tiles.block_m, tmm_block_p=tiles.block_p,
+                tmm_block_k=tiles.block_k)
+            return jax.jit(model.with_execution(exe2).transform)
+
+        prog = autotune.tune(
+            cands, build_candidate,
+            (state, jnp.zeros((bucket, model.in_dim), dtype)),
+            timer=self.clock.now)
+        with self._metrics_lock:
+            self.autotunes += 1
+        return prog
 
     def _serve_rows(self, snap: Snapshot, x: jax.Array) -> jax.Array:
         """Run (R, m) rows through bucketed batches; returns (R, n) rows in

@@ -32,6 +32,17 @@ from repro.checkpoint import config_hash
 PyTree = Any
 
 
+def model_config_hash(model: Any) -> str:
+    """Registry identity of a model config — the `Execution` policy is
+    folded in EXPLICITLY, not just via the model's repr.  Serving identity
+    must distinguish "same stages, xla backend" from "same stages, pallas
+    backend" (they compile different programs and tune different tiles)
+    even for model types whose repr omits their execution attribute —
+    otherwise a pallas re-register dedupes onto the XLA entry and the
+    fleet silently serves XLA."""
+    return config_hash((model, getattr(model, "execution", None)))
+
+
 @dataclasses.dataclass
 class _Entry:
     model: Any                      # DRModel or DREnsemble-compatible
@@ -82,7 +93,7 @@ class ModelRegistry:
                  ensemble: Optional[int] = None, replace: bool = False) -> int:
         """Add `name` with `state` as version 0 (live).  Registering an
         existing name requires the same config hash unless `replace=True`."""
-        chash = config_hash(model)
+        chash = model_config_hash(model)
         with self._lock:
             old = self._entries.get(name)
             if old is not None and old.chash != chash and not replace:

@@ -50,10 +50,10 @@ import dataclasses
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.checkpoint import config_hash
 from repro.serve.durability import (CorruptBlobError, DurableStore,
                                     host_state, state_hash)
-from repro.serve.registry import ModelRegistry, Snapshot
+from repro.serve.registry import (ModelRegistry, Snapshot,
+                                  model_config_hash)
 from repro.serve.transport import Message, Transport, TransportError
 
 # content addressing (`host_state` / `state_hash`) lives in
@@ -398,7 +398,7 @@ class ReplicatedRegistry:
                                     replace=replace)
                 op = Op(seq=self._applied.get(name, -1) + 1, kind="register",
                         name=name, version=0, state_hash=h,
-                        chash=config_hash(model), ensemble=ensemble,
+                        chash=model_config_hash(model), ensemble=ensemble,
                         replace=replace, model=model, term=self.term)
                 self._commit_meta(op, st)
             self._broadcast(op, {h: st})

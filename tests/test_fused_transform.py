@@ -1,0 +1,400 @@
+"""Fused pad+project+whiten kernel + the serving fast path around it:
+allclose parity vs the pure-jnp oracles (interpret mode on CPU), the
+interpret-resolution policy, the register-time tile autotuner's cache
+lifecycle (promote hits, eviction re-tunes), the Execution-aware registry
+config hash, and the floor/ceiling regression-gate directions.  Marked
+`kernels` — CI runs these in the dedicated kernels job."""
+
+import dataclasses
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import execution as exe_mod
+from repro.core import random_projection as rp
+from repro.core.execution import PALLAS, XLA, Execution, resolve_interpret
+from repro.dr import DRModel, EASIStage, RPStage
+from repro.kernels import autotune, ops, ref
+from repro.kernels.fused_transform import fused_transform
+from repro.serve import BucketPolicy, DRService, ModelRegistry
+from repro.serve.clock import VirtualClock
+from repro.serve.registry import model_config_hash
+
+jax.config.update("jax_enable_x64", False)
+
+pytestmark = pytest.mark.kernels
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _mk_ternary(key, p, m):
+    return rp.sample_ternary(key, rp.RPConfig(m=m, p=p))
+
+
+def _mk_b(key, n, p, dtype=jnp.float32):
+    return jax.random.normal(key, (n, p), dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel vs oracle
+# ---------------------------------------------------------------------------
+
+FUSED_SHAPES = [
+    # (rows, m, p, n) — paper scale, ragged rows, and non-aligned odd dims
+    (8, 32, 16, 8),
+    (13, 32, 16, 8),
+    (64, 33, 17, 9),
+    (200, 100, 40, 10),
+    (5, 7, 3, 2),
+    (1, 32, 16, 8),
+]
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("rows,m,p,n", FUSED_SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, rows, m, p, n, dtype):
+        kx, kr, kb = jax.random.split(jax.random.PRNGKey(rows + 7 * m), 3)
+        x = jax.random.normal(kx, (rows, m), dtype)
+        r = _mk_ternary(kr, p, m)
+        b = _mk_b(kb, n, p, dtype)
+        got = fused_transform(x, r, b, scale=0.37, interpret=True)
+        want = ref.fused_transform_ref(x, r, b, scale=0.37)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize(
+        "blocks", [(8, 128, 128), (16, 256, 256), (512, 512, 512),
+                   (32, 128, 512)])
+    def test_block_shape_invariance(self, blocks):
+        bm, bp, bk = blocks
+        x = jax.random.normal(jax.random.PRNGKey(0), (40, 300), jnp.float32)
+        r = _mk_ternary(jax.random.PRNGKey(1), 48, 300)
+        b = _mk_b(jax.random.PRNGKey(2), 12, 48)
+        got = fused_transform(x, r, b, block_m=bm, block_p=bp, block_k=bk,
+                              interpret=True)
+        want = ref.fused_transform_ref(x, r, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_exactness_on_integers(self):
+        # Ternary R and small-integer x/B keep every product exact in fp32,
+        # so the pad-and-mask plumbing must be bit-exact vs the oracle.
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.integers(-8, 8, (16, 64)), jnp.float32)
+        r = _mk_ternary(jax.random.PRNGKey(2), 32, 64)
+        b = jnp.asarray(rng.integers(-4, 4, (8, 32)), jnp.float32)
+        got = fused_transform(x, r, b, interpret=True)
+        want = ref.fused_transform_ref(x, r, b)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_vmap_over_ensemble_axis(self):
+        # DREnsemble vmaps transform over stacked (R, B) — the kernel must
+        # batch cleanly under vmap.
+        k = 3
+        kx, kr, kb = jax.random.split(jax.random.PRNGKey(9), 3)
+        x = jax.random.normal(kx, (24, 32), jnp.float32)
+        rs = jnp.stack([_mk_ternary(jax.random.fold_in(kr, i), 16, 32)
+                        for i in range(k)])
+        bs = jax.random.normal(kb, (k, 8, 16), jnp.float32)
+        got = jax.vmap(
+            lambda r, b: fused_transform(x, r, b, interpret=True))(rs, bs)
+        want = jnp.stack([ref.fused_transform_ref(x, rs[i], bs[i])
+                          for i in range(k)])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_ops_wrapper_resolves_execution(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 32), jnp.float32)
+        r = _mk_ternary(jax.random.PRNGKey(1), 16, 32)
+        b = _mk_b(jax.random.PRNGKey(2), 8, 16)
+        exe = dataclasses.replace(PALLAS, interpret=True)
+        got = ops.fused_transform(x, r, b, execution=exe)
+        want = ref.fused_transform_ref(x, r, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# interpret resolution: explicit pin > Execution policy > cached probe
+# ---------------------------------------------------------------------------
+
+class TestInterpretResolution:
+    def test_explicit_pin_wins(self):
+        assert resolve_interpret(True, Execution(interpret=False)) is True
+        assert resolve_interpret(False, Execution(interpret=True)) is False
+
+    def test_policy_pin_wins_over_probe(self):
+        assert resolve_interpret(None, Execution(interpret=True)) is True
+        assert resolve_interpret(None, Execution(interpret=False)) is False
+
+    def test_probe_is_process_cached(self):
+        exe_mod._probe_interpret.cache_clear()
+        first = resolve_interpret()
+        assert first is (jax.default_backend() != "tpu")
+        assert resolve_interpret(None, None) is first
+        assert exe_mod._probe_interpret.cache_info().currsize == 1
+        # the second resolve hit the lru cache, not a fresh backend probe
+        assert exe_mod._probe_interpret.cache_info().hits >= 1
+
+    def test_constants_leave_mode_unpinned(self):
+        assert XLA.interpret is None
+        assert PALLAS.interpret is None
+        assert PALLAS.resolved_interpret() is resolve_interpret()
+
+
+# ---------------------------------------------------------------------------
+# model-level parity: pallas fused path ≡ stage-wise XLA reference
+# ---------------------------------------------------------------------------
+
+def _pair_model(personality, backend, m=32, p=16, n=8, block=4):
+    easi = getattr(EASIStage, personality)(p, n, mu=1e-3)
+    return DRModel(stages=(RPStage(m, p), easi), block_size=block,
+                   execution=Execution(backend=backend))
+
+
+class TestModelFusedPath:
+    @pytest.mark.parametrize("personality", ["whiten", "rotation", "full"])
+    @pytest.mark.parametrize("rows", [4, 13, 32])
+    def test_transform_parity_all_personalities(self, personality, rows):
+        xla_m = _pair_model(personality, "xla")
+        pal_m = _pair_model(personality, "pallas")
+        state = xla_m.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (rows, 32), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(pal_m.transform(state, x)),
+            np.asarray(xla_m.transform(state, x)), rtol=1e-4, atol=1e-4)
+
+    def test_three_stage_cascade_parity(self):
+        # fused pair covers stages 0-1; the trailing EASI runs stage-wise
+        stages = (RPStage(32, 16), EASIStage.rotation(16, 8),
+                  EASIStage.whiten(8, 4))
+        xla_m = DRModel(stages=stages, execution=XLA)
+        pal_m = DRModel(stages=stages, execution=PALLAS)
+        state = xla_m.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (19, 32), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(pal_m.transform(state, x)),
+            np.asarray(xla_m.transform(state, x)), rtol=1e-4, atol=1e-4)
+
+    def test_update_parity_easi_kernel(self):
+        # streamed updates fold through kernels.ops.easi_update under pallas
+        xla_m = _pair_model("full", "xla")
+        pal_m = _pair_model("full", "pallas")
+        st_x = xla_m.init(jax.random.PRNGKey(0))
+        st_p = st_x
+        x = jax.random.normal(jax.random.PRNGKey(1), (6, 4, 32), jnp.float32)
+        for blk in x:
+            st_x = xla_m.update(st_x, blk)
+            st_p = pal_m.update(st_p, blk)
+        np.testing.assert_allclose(
+            np.asarray(st_p.stages[1]), np.asarray(st_x.stages[1]),
+            rtol=5e-4, atol=5e-5)
+
+    def test_serve_and_update_parity(self):
+        outs = {}
+        for backend in ("xla", "pallas"):
+            model = _pair_model("rotation", backend)
+            svc = DRService(buckets=BucketPolicy(min_bucket=4, max_bucket=16),
+                            clock=VirtualClock())
+            svc.register("m", model, model.init(jax.random.PRNGKey(0)))
+            ys = []
+            for i in range(5):
+                blk = jax.random.normal(jax.random.PRNGKey(10 + i), (4, 32),
+                                        jnp.float32)
+                ys.append(np.asarray(svc.serve_and_update("m", blk)))
+            svc.promote("m")
+            probe = jax.random.normal(jax.random.PRNGKey(99), (7, 32),
+                                      jnp.float32)
+            outs[backend] = (np.concatenate(ys),
+                             np.asarray(svc.transform("m", probe)))
+        np.testing.assert_allclose(outs["pallas"][0], outs["xla"][0],
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(outs["pallas"][1], outs["xla"][1],
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# autotuner: sweep dedupe, tie-breaking, and the cache lifecycle
+# ---------------------------------------------------------------------------
+
+class TestAutotune:
+    def test_paper_scale_sweep_collapses_to_one(self):
+        # m=32, p=16, bucket 64: every candidate clamps to the same
+        # effective tiles, so tuning costs zero extra compiles.
+        assert len(autotune.candidates(64, 16, 32)) == 1
+
+    def test_first_candidate_leads_and_dedupes(self):
+        mine = autotune.TileConfig(64, 128, 128)
+        cands = autotune.candidates(1024, 200, 600, first=mine)
+        assert cands[0] == mine
+        assert len(cands) == len(set(c.effective(1024, 200, 600)
+                                     for c in cands))
+        assert len(cands) > 1
+
+    def test_tie_keeps_first_candidate(self):
+        built = []
+
+        def build(tiles):
+            built.append(tiles)
+            return lambda v: v + 1.0
+        cands = (autotune.TileConfig(8, 128, 128),
+                 autotune.TileConfig(16, 128, 128))
+        prog = autotune.tune(cands, build, (jnp.zeros(4),),
+                             timer=lambda: 0.0)  # virtual clock: all tie
+        assert prog.tiles == cands[0]
+        assert built == list(cands)
+        assert set(prog.timings_ms) == set(cands)
+
+    def test_single_candidate_skips_timing(self):
+        built = []
+
+        def build(tiles):
+            built.append(tiles)
+            return lambda v: v
+        prog = autotune.tune((autotune.TileConfig(),), build, (jnp.zeros(2),),
+                             timer=lambda: 0.0)
+        assert built == [autotune.TileConfig()]
+        assert prog.timings_ms == {}
+
+
+class TestServiceAutotuneCache:
+    def _svc(self, cache_size=32, max_bucket=8):
+        model = _pair_model("rotation", "pallas")
+        svc = DRService(buckets=BucketPolicy(min_bucket=4,
+                                             max_bucket=max_bucket),
+                        compile_cache_size=cache_size, clock=VirtualClock())
+        state = model.init(jax.random.PRNGKey(0))
+        svc.register("m", model, state)
+        return svc, model, state
+
+    def test_register_tunes_every_bucket(self):
+        svc, model, state = self._svc(max_bucket=16)   # buckets 4, 8, 16
+        assert svc.metrics()["autotunes"] == 3
+        assert svc.cache.misses == 3
+        snap = svc.registry.get("m")
+        prog = svc._transform_fn(snap, 8, jnp.dtype(jnp.float32))
+        assert isinstance(prog, autotune.TunedProgram)
+        # collapsed paper-scale sweep keeps the policy's own tiles
+        exe = model.execution
+        assert prog.tiles == autotune.TileConfig(
+            exe.tmm_block_m, exe.tmm_block_p, exe.tmm_block_k)
+        assert svc.metrics()["autotunes"] == 3         # that was a cache hit
+
+    def test_promote_never_retunes(self):
+        svc, model, state = self._svc()                # buckets 4, 8
+        assert svc.metrics()["autotunes"] == 2
+        for i in range(3):
+            svc.serve_and_update(
+                "m", jax.random.normal(jax.random.PRNGKey(i), (4, 32)))
+        m0 = svc.cache.misses          # transform buckets + the tws program
+        svc.promote("m")                               # same chash → cache hit
+        svc.transform("m", jnp.ones((8, 32), jnp.float32))
+        assert svc.metrics()["autotunes"] == 2
+        assert svc.cache.misses == m0
+
+    def test_eviction_drops_program_and_tiles_then_retunes(self):
+        svc, model, state = self._svc(cache_size=1)    # buckets 4, 8
+        assert svc.metrics()["autotunes"] == 2         # bucket-4 entry evicted
+        assert len(svc.cache) == 1
+        svc.transform("m", jnp.ones((4, 32), jnp.float32))  # rebuild → re-tune
+        assert svc.metrics()["autotunes"] == 3
+        assert svc.cache.misses == 3
+
+    def test_xla_register_does_not_tune(self):
+        model = _pair_model("rotation", "xla")
+        svc = DRService(buckets=BucketPolicy(min_bucket=4, max_bucket=8),
+                        clock=VirtualClock())
+        svc.register("m", model, model.init(jax.random.PRNGKey(0)))
+        assert svc.metrics()["autotunes"] == 0
+        assert svc.cache.misses == 0                   # XLA compiles lazily
+
+
+# ---------------------------------------------------------------------------
+# registry config hash folds in the Execution backend
+# ---------------------------------------------------------------------------
+
+class _ReprBlindModel:
+    """A model whose repr hides its execution policy — the registry hash
+    must still distinguish backends (it hashes the policy explicitly, not
+    whatever the model's repr happens to include)."""
+
+    def __init__(self, execution):
+        self.execution = execution
+
+    def __repr__(self):
+        return "_ReprBlindModel()"
+
+
+class TestRegistryExecutionHash:
+    def test_backend_changes_model_config_hash(self):
+        stages = (RPStage(32, 16), EASIStage.rotation(16, 8))
+        h_xla = model_config_hash(DRModel(stages=stages, execution=XLA))
+        h_pal = model_config_hash(DRModel(stages=stages, execution=PALLAS))
+        assert h_xla != h_pal
+
+    def test_hash_is_repr_independent(self):
+        a = _ReprBlindModel(XLA)
+        b = _ReprBlindModel(PALLAS)
+        assert repr(a) == repr(b)
+        assert model_config_hash(a) != model_config_hash(b)
+
+    def test_register_rejects_silent_backend_swap(self):
+        reg = ModelRegistry()
+        reg.register("m", _ReprBlindModel(XLA), {"w": 0})
+        with pytest.raises(ValueError, match="replace=True"):
+            reg.register("m", _ReprBlindModel(PALLAS), {"w": 0})
+        reg.register("m", _ReprBlindModel(PALLAS), {"w": 0}, replace=True)
+        assert reg.get("m").chash == model_config_hash(_ReprBlindModel(PALLAS))
+
+
+# ---------------------------------------------------------------------------
+# regression gate directions (floor vs ceiling)
+# ---------------------------------------------------------------------------
+
+class TestRegressionGateDirections:
+    def _run(self, tmp_path, measured, baseline, *extra):
+        mf = tmp_path / "measured.json"
+        bf = tmp_path / "baseline.json"
+        mf.write_text(json.dumps(measured))
+        bf.write_text(json.dumps(baseline))
+        return subprocess.run(
+            [sys.executable, str(REPO / "benchmarks" / "check_regression.py"),
+             str(mf), str(bf), *extra],
+            capture_output=True, text=True)
+
+    BASE = {"r": {"util": {"value": 0.01, "gate": "floor"}, "lat": 100.0}}
+
+    def test_floor_passes_above_and_at_limit(self, tmp_path):
+        res = self._run(tmp_path,
+                        [{"name": "r", "util": 0.005, "lat": 90.0}], self.BASE)
+        assert res.returncode == 0, res.stdout + res.stderr
+
+    def test_floor_fails_below_limit(self, tmp_path):
+        res = self._run(tmp_path,
+                        [{"name": "r", "util": 0.004, "lat": 90.0}], self.BASE)
+        assert res.returncode == 1
+        assert "util" in res.stderr and "floor" in res.stderr
+
+    def test_ceiling_still_fails_high(self, tmp_path):
+        res = self._run(tmp_path,
+                        [{"name": "r", "util": 0.02, "lat": 900.0}], self.BASE)
+        assert res.returncode == 1
+        assert "lat" in res.stderr
+
+    def test_only_filters_baseline_rows(self, tmp_path):
+        base = dict(self.BASE, other={"x": 1.0})
+        res = self._run(tmp_path, [{"name": "r", "util": 0.02, "lat": 90.0}],
+                        base, "--only", "r")
+        assert res.returncode == 0, res.stdout + res.stderr
+        res = self._run(tmp_path, [{"name": "r", "util": 0.02, "lat": 90.0}],
+                        base, "--only", "nope")
+        assert res.returncode == 2
