@@ -64,6 +64,11 @@ def main() -> int:
                     help="`repro.analysis --format json` report; injected as "
                     "an 'analysis/findings' row so finding-count creep is "
                     "visible on the same trajectory as the latency rows")
+    ap.add_argument("--kernel-resources", metavar="FILE",
+                    help="`python -m repro.kernels.resource_model --json` "
+                    "rows; merged into the measured set so each kernel's "
+                    "static VMEM bytes are CEILING-gated per baseline.json "
+                    "(the repo's analogue of the paper's resource table)")
     ap.add_argument("--only", action="append", metavar="ROW",
                     help="gate only these baseline rows (repeatable) — for "
                     "runs that legitimately measure a subset, e.g. the "
@@ -96,6 +101,11 @@ def main() -> int:
             "findings_total": int(ana.get("total", 0)),
             "findings_baselined": int(ana.get("baselined", 0)),
         }
+
+    if args.kernel_resources:
+        with open(args.kernel_resources) as f:
+            for row in json.load(f):
+                measured[row["name"]] = row
 
     failures = []
     print(f"{'row':<40} {'metric':<14} {'measured':>12} {'baseline':>12} "

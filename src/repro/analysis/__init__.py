@@ -16,20 +16,28 @@ Pieces:
     annotation extraction for `# guarded-by:` / `# requires-lock:` /
     `# analysis: allow(...)`).
   * `registry` — the pluggable checker registry (`@register`).
-  * `checkers/` — the five shipped checkers: lock-discipline,
-    lock-order, clock-discipline, jit-hygiene, fsync-before-ack.
+  * `callgraph` / `dataflow` — the cross-module call graph and the
+    held-lock dataflow engine (entry sets solved as the intersection
+    over callers), powering the interprocedural checkers.
+  * `checkers/` — the nine shipped checkers: the five lexical ones
+    (lock-discipline, lock-order, clock-discipline, jit-hygiene,
+    fsync-before-ack), three dataflow ones (lock-flow,
+    blocking-under-lock, term-fence), and the static Pallas auditor
+    (kernel-resources, backed by `kernels/resource_model.py`).
   * `baseline` — committed grandfather list so the CLI fails only on
     NEW findings.
   * `runner` / `report` / `__main__` — scan, render, gate.
 
 CLI:  python -m repro.analysis src/          # exit 1 on any new finding
-      python -m repro.analysis src/ --format json --output findings.json
+      python -m repro.analysis src tests --format json --output findings.json
+      python -m repro.analysis --diff origin/main   # changed files only
 
 Annotation syntax (see EXPERIMENTS.md §Invariant catalog):
 
   self._staged = {}            # guarded-by: _tws_guard
   def _commit_meta(self, op):
       # requires-lock: _meta   (callers hold the lock; body counts as held)
+  self._mutate = RLock()       # coarse-lock: held across I/O by design
   risky_line()                 # analysis: allow(checker-id) — waiver
 """
 

@@ -9,6 +9,8 @@ as the findings artifact (see .github/workflows/ci.yml).
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 from typing import List, Optional
 
@@ -36,6 +38,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                         "findings and exit 0")
     parser.add_argument("--checkers", metavar="ID[,ID...]",
                         help="run only these checker ids")
+    parser.add_argument("--diff", metavar="BASE",
+                        help="scan only .py files changed since git rev "
+                        "BASE (restricted to the given roots) — the fast "
+                        "pre-push mode")
     parser.add_argument("--list", action="store_true", dest="list_checkers",
                         help="list registered checkers and exit")
     args = parser.parse_args(argv)
@@ -45,9 +51,21 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(f"{checker.id:20s} {checker.description}")
         return 0
 
+    roots = args.paths or ["src"]
+    if args.diff:
+        try:
+            roots = _changed_files(args.diff, roots)
+        except RuntimeError as exc:
+            print(f"repro.analysis: {exc}", file=sys.stderr)
+            return 2
+        if not roots:
+            print("repro.analysis: no changed .py files under the given "
+                  "roots; nothing to scan")
+            return 0
+
     checker_ids = args.checkers.split(",") if args.checkers else None
     try:
-        result = scan(args.paths or ["src"], checker_ids)
+        result = scan(roots, checker_ids)
     except KeyError as exc:
         print(f"repro.analysis: {exc.args[0]}", file=sys.stderr)
         return 2
@@ -71,6 +89,33 @@ def main(argv: Optional[List[str]] = None) -> int:
         with open(args.output, "w", encoding="utf-8") as f:
             f.write(rendered)
     return 1 if new else 0
+
+
+def _changed_files(base: str, roots: List[str]) -> List[str]:
+    """`.py` files changed since `base` that live under one of `roots`.
+
+    Deleted files are naturally excluded (they no longer exist on disk);
+    an unknown rev or a non-git directory raises RuntimeError (exit 2).
+    """
+    try:
+        proc = subprocess.run(
+            ["git", "diff", "--name-only", base, "--"],
+            capture_output=True, text=True, check=True)
+    except FileNotFoundError as exc:
+        raise RuntimeError(f"--diff needs git: {exc}") from exc
+    except subprocess.CalledProcessError as exc:
+        raise RuntimeError(
+            f"git diff {base!r} failed: {exc.stderr.strip()}") from exc
+    prefixes = tuple(r.rstrip("/") + "/" for r in roots)
+    out = []
+    for line in proc.stdout.splitlines():
+        path = line.strip().replace(os.sep, "/")
+        if not path.endswith(".py") or not os.path.isfile(path):
+            continue
+        if path.startswith(prefixes) or path in [r.rstrip("/")
+                                                 for r in roots]:
+            out.append(path)
+    return sorted(out)
 
 
 if __name__ == "__main__":

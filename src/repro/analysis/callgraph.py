@@ -1,0 +1,296 @@
+"""Cross-module call graph over parsed `SourceUnit`s.
+
+PR 7's checkers were lexical: each one looked at one function body at a
+time, so a helper that mutates guarded state through one level of call
+indirection was invisible unless someone remembered the
+`# requires-lock:` annotation.  This module builds the structure the
+interprocedural checkers need: every function/method definition across
+the scanned units, and every call site with
+
+  * the **resolved callee** (best-effort, see resolution tiers below),
+  * the **lexically held lock set** at the call site (the same
+    `with self.<lock>:` tracking lock-discipline uses), and
+  * whether the call stays on the **same object** (lock names are
+    per-instance: `self._meta` held in the caller is the callee's
+    `self._meta` only when the callee runs on the same `self`).
+
+Resolution tiers, most to least precise:
+
+  1. `self.m(...)`          -> method `m` of the same class (same unit).
+  2. bare `m(...)`          -> a nested def in the enclosing function
+                               chain, else a module-level function in
+                               the same unit.
+  3. `<anything>.m(...)`    -> method `m` IF exactly one scanned class
+                               defines that name (unique-name tier, used
+                               by cross-object checkers like term-fence;
+                               marked `same_object=False`).
+
+Unresolved calls are simply absent from the edge list — the checkers
+built on top are deliberately optimistic about code they cannot see
+(stdlib, jax, ...), because a checker that cries wolf on every opaque
+call gets turned off, not fixed.
+
+Deferred bodies (nested `def`s and `lambda`s) do NOT inherit the
+enclosing lexical held-set: they may run after the with-block exits.
+Nested defs get their own `FunctionInfo` (callable by bare name from the
+enclosing scope); lambda bodies are skipped entirely.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.source import SourceUnit, dotted_name, with_lock_name
+
+_FN_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+@dataclass
+class FunctionInfo:
+    """One function/method definition in the scanned corpus."""
+    qualname: str                  # "<path>::<Class>.<name>" / "<path>::<name>"
+    name: str
+    cls: Optional[str]             # enclosing class name, if a method
+    path: str
+    unit: SourceUnit
+    node: ast.AST
+    declared: frozenset = frozenset()   # `# requires-lock:` in own span
+    is_handler_like: bool = False       # handle/_handle*/_on_* naming
+
+
+@dataclass
+class CallSite:
+    """One resolved call edge, with the caller's lexical lock context."""
+    caller: str                    # qualname of the enclosing function
+    callee: str                    # qualname of the resolved target
+    line: int
+    held: frozenset                # locks lexically held at the call
+    same_object: bool              # True for self./bare-name resolution
+
+
+@dataclass
+class CallGraph:
+    functions: Dict[str, FunctionInfo] = field(default_factory=dict)
+    calls: List[CallSite] = field(default_factory=list)
+    # every `with self.<lock>:` / `# requires-lock:` / `# guarded-by:`
+    # lock name seen anywhere — the dataflow lattice's universe
+    lock_universe: frozenset = frozenset()
+
+    def callers_of(self, qualname: str) -> List[CallSite]:
+        return [c for c in self.calls if c.callee == qualname]
+
+    def calls_from(self, qualname: str) -> List[CallSite]:
+        return [c for c in self.calls if c.caller == qualname]
+
+    # ---- construction ------------------------------------------------------
+
+    @classmethod
+    def build(cls, units: Iterable[SourceUnit]) -> "CallGraph":
+        graph = cls()
+        builder = _Builder(graph)
+        units = list(units)
+        for unit in units:
+            builder.collect_definitions(unit)
+        for unit in units:
+            builder.collect_calls(unit)
+        graph.lock_universe = frozenset(builder.locks)
+        return graph
+
+
+def is_handler_name(name: str) -> bool:
+    """Message-handler naming convention shared by replication/election:
+    `handle`, `_handle*`, `_on_*`."""
+    return (name == "handle" or name.startswith("_handle")
+            or name.startswith("_on_"))
+
+
+class _Builder:
+    def __init__(self, graph: CallGraph):
+        self.graph = graph
+        self.locks: set = set()
+        # (path, cls_or_None, name) -> qualname, for tiers 1-2
+        self._scoped: Dict[Tuple[str, Optional[str], str], str] = {}
+        # method name -> [qualname, ...] across every scanned class (tier 3)
+        self._by_method_name: Dict[str, List[str]] = {}
+
+    # ---- pass 1: definitions ----------------------------------------------
+
+    def collect_definitions(self, unit: SourceUnit) -> None:
+        requires = unit.requires_lock_lines()
+        self.locks.update(requires.values())
+        self.locks.update(unit.guarded_lines().values())
+        for node in unit.tree.body:
+            if isinstance(node, _FN_NODES):
+                self._define(unit, node, cls=None, prefix="")
+            elif isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, _FN_NODES):
+                        self._define(unit, item, cls=node.name,
+                                     prefix=f"{node.name}.")
+
+    def _define(self, unit: SourceUnit, node, cls: Optional[str],
+                prefix: str) -> None:
+        qualname = f"{unit.path}::{prefix}{node.name}"
+        declared = frozenset(self._own_requires(unit, node))
+        info = FunctionInfo(
+            qualname=qualname, name=node.name, cls=cls, path=unit.path,
+            unit=unit, node=node, declared=declared,
+            is_handler_like=is_handler_name(node.name))
+        self.graph.functions[qualname] = info
+        self._scoped[(unit.path, cls, node.name)] = qualname
+        if cls is not None:
+            self._by_method_name.setdefault(node.name, []).append(qualname)
+        # nested defs become addressable functions of their own, callable
+        # by bare name from the enclosing scope chain; qualnames nest
+        # (`outer.<a>.<b>`) to match the call-site walk
+        for child in _immediate_defs(node):
+            self._define_nested(unit, child, cls, qualname)
+
+    def _define_nested(self, unit: SourceUnit, node, cls: Optional[str],
+                       parent_q: str) -> None:
+        nested_q = f"{parent_q}.<{node.name}>"
+        self.graph.functions[nested_q] = FunctionInfo(
+            qualname=nested_q, name=node.name, cls=cls, unit=unit,
+            path=unit.path, node=node,
+            declared=frozenset(self._own_requires(unit, node)),
+            is_handler_like=False)
+        for child in _immediate_defs(node):
+            self._define_nested(unit, child, cls, nested_q)
+
+    @staticmethod
+    def _own_requires(unit: SourceUnit, fn) -> List[str]:
+        """`# requires-lock:` lines inside `fn` but OUTSIDE any nested def
+        (a closure's contract belongs to the closure)."""
+        requires = unit.requires_lock_lines()
+        start, end = fn.lineno, getattr(fn, "end_lineno", fn.lineno) or fn.lineno
+        nested = [(c.lineno, getattr(c, "end_lineno", c.lineno) or c.lineno)
+                  for c in ast.walk(fn)
+                  if c is not fn and isinstance(c, _FN_NODES)]
+        out = []
+        for line, lock in requires.items():
+            if not start <= line <= end:
+                continue
+            if any(ns <= line <= ne for ns, ne in nested):
+                continue
+            out.append(lock)
+        return out
+
+    # ---- pass 2: call sites ------------------------------------------------
+
+    def collect_calls(self, unit: SourceUnit) -> None:
+        for node in unit.tree.body:
+            if isinstance(node, _FN_NODES):
+                self._walk_fn(unit, node, cls=None,
+                              qualname=f"{unit.path}::{node.name}",
+                              scope={})
+            elif isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, _FN_NODES):
+                        self._walk_fn(
+                            unit, item, cls=node.name,
+                            qualname=f"{unit.path}::{node.name}.{item.name}",
+                            scope={})
+
+    def _walk_fn(self, unit: SourceUnit, fn, cls: Optional[str],
+                 qualname: str, scope: Dict[str, str]) -> None:
+        """Record call sites in `fn`'s own body (nested defs recurse with
+        a reset held-set and their own qualname).  `scope` maps bare
+        names of lexically visible nested defs to their qualnames —
+        pre-collected so a call ABOVE the nested `def` still resolves."""
+        scope = dict(scope)
+        scope.update({d.name: f"{qualname}.<{d.name}>"
+                      for d in _immediate_defs(fn)})
+        self._walk_body(fn.body, unit, cls, qualname, scope,
+                        held=frozenset())
+
+    def _walk_body(self, body, unit, cls, qualname, scope, held) -> None:
+        for stmt in body:
+            self._walk_stmt(stmt, unit, cls, qualname, scope, held)
+
+    def _walk_stmt(self, stmt, unit, cls, qualname, scope, held) -> None:
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            acquired = set()
+            for item in stmt.items:
+                name = with_lock_name(item)
+                if name is not None:
+                    acquired.add(name)
+                    self.locks.add(name)
+                self._visit_expr(item.context_expr, unit, cls, qualname,
+                                 scope, held)
+            self._walk_body(stmt.body, unit, cls, qualname, scope,
+                            held | acquired)
+            return
+        if isinstance(stmt, _FN_NODES):
+            self._walk_fn(unit, stmt, cls,
+                          qualname=f"{qualname}.<{stmt.name}>", scope=scope)
+            return
+        if isinstance(stmt, ast.ClassDef):
+            return  # function-local classes: out of scope
+        for expr in ast.iter_child_nodes(stmt):
+            if isinstance(expr, ast.expr):
+                self._visit_expr(expr, unit, cls, qualname, scope, held)
+        for attr in ("body", "orelse", "finalbody"):
+            inner = getattr(stmt, attr, None)
+            if inner:
+                self._walk_body(inner, unit, cls, qualname, scope, held)
+        for handler in getattr(stmt, "handlers", []) or []:
+            self._walk_body(handler.body, unit, cls, qualname, scope, held)
+
+    def _visit_expr(self, expr, unit, cls, qualname, scope, held) -> None:
+        stack = [expr]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.Lambda, *_FN_NODES)):
+                # deferred body: skipped (documented limitation) — the
+                # call that *consumes* the lambda is still recorded
+                continue
+            if isinstance(node, ast.Call):
+                self._record_call(node, unit, cls, qualname, scope, held)
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _record_call(self, call: ast.Call, unit, cls, qualname, scope,
+                     held) -> None:
+        func = call.func
+        callee = None
+        same_object = True
+        if isinstance(func, ast.Name):
+            # bare name: lexically visible nested def wins, else a
+            # module-level function in this unit
+            callee = scope.get(func.id)
+            if callee is None:
+                callee = self._scoped.get((unit.path, None, func.id))
+        elif isinstance(func, ast.Attribute):
+            base = dotted_name(func.value)
+            if base == "self" and cls is not None:
+                callee = self._scoped.get((unit.path, cls, func.attr))
+            if callee is None:
+                candidates = self._by_method_name.get(func.attr, [])
+                if len(candidates) == 1:
+                    callee = candidates[0]
+                    same_object = False
+        if callee is not None:
+            self.graph.calls.append(CallSite(
+                caller=qualname, callee=callee, line=call.lineno,
+                held=frozenset(held), same_object=same_object))
+
+
+def _immediate_defs(fn) -> List[ast.AST]:
+    """Nested defs directly inside `fn`'s body (not inside a deeper def)."""
+    out: List[ast.AST] = []
+
+    def visit(body):
+        for stmt in body:
+            if isinstance(stmt, _FN_NODES):
+                out.append(stmt)
+                continue
+            for attr in ("body", "orelse", "finalbody"):
+                inner = getattr(stmt, attr, None)
+                if inner:
+                    visit(inner)
+            for handler in getattr(stmt, "handlers", []) or []:
+                visit(handler.body)
+
+    visit(fn.body)
+    return out

@@ -1,9 +1,13 @@
 """Built-in checkers.  Importing this package registers them all."""
 
 from repro.analysis.checkers import (  # noqa: F401
+    blocking_under_lock,
     clock_discipline,
     fsync_ack,
     jit_hygiene,
+    kernel_resources,
     lock_discipline,
+    lock_flow,
     lock_order,
+    term_fence,
 )

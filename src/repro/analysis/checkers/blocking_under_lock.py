@@ -1,0 +1,168 @@
+"""blocking-under-lock: slow calls reached while a serve lock is held.
+
+Tail latency in the serving stack dies by critical section: a transport
+round-trip, an fsync'd WAL append, or a jit trace+compile inside a
+`with self._lock:` turns one slow caller into a convoy.  This checker
+walks every function in `src/repro/serve/` with the lexical held-set
+AND the dataflow entry set (locks inherited from all callers), and
+flags any recognised blocking primitive reached while at least one
+non-coarse lock is held.
+
+Blocking primitives are matched on the dotted call name (suffix
+patterns — the static analogue of "I know what `*.transport.send` is"):
+
+  * transport round-trips:   `*transport*.send` / `*transport*.recv`
+  * durable appends:         `*.log_op|log_vote|log_term|log_reset`,
+                             `*wal*.append`, `*durable*.compact`
+  * blob I/O:                `*.blobs.put` / `*.blobs.get`
+  * raw fsync:               `*.fsync`, `*._fsync_dir`
+  * compile points:          `*.get_or_build` (jit trace+compile on
+                             miss), `*.block_until_ready`
+
+Two in-source escape hatches:
+
+  * `# coarse-lock` on the lock's creation line: the lock is DESIGNED
+    to be held across I/O (replication's `_mutate` serializes
+    append+broadcast+quorum; the WAL lock serializes append+fsync so
+    ack order equals durable order).  Exempt wholesale.
+  * `# analysis: allow(blocking-under-lock)` on the call line: a
+    reviewed exception (e.g. the rare replace-race rebuild in
+    `serve_and_update`).
+
+Everything else is a finding — fix it by hoisting (see
+`DRService._fused_update_fn`) or grandfather it in the baseline with
+the justification in the PR that adds it.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import CallGraph, _FN_NODES
+from repro.analysis.dataflow import HeldLockDataflow
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Checker, register
+from repro.analysis.source import SourceUnit, dotted_name, with_lock_name
+
+# (predicate over dotted-name segments, human label)
+_LEAF_LABELS = {
+    "log_op": "WAL append (fsync)",
+    "log_vote": "WAL append (fsync)",
+    "log_term": "WAL append (fsync)",
+    "log_reset": "WAL append (fsync)",
+    "fsync": "fsync",
+    "_fsync_dir": "directory fsync",
+    "get_or_build": "potential jit trace+compile",
+    "block_until_ready": "device sync",
+}
+
+
+def classify_blocking(rendered: str) -> Optional[str]:
+    """Label if `rendered` (dotted call name) is a known blocking
+    primitive, else None.  Unresolvable/ambiguous names are NOT flagged:
+    optimism keeps the checker's word worth something."""
+    segments = rendered.split(".")
+    leaf = segments[-1]
+    receiver = ".".join(segments[:-1])
+    if leaf in ("send", "recv") and "transport" in receiver:
+        return "transport round-trip"
+    if leaf == "append" and "wal" in receiver:
+        return "WAL append (fsync)"
+    if leaf == "compact" and "durable" in receiver:
+        return "WAL/snapshot compaction (fsync)"
+    if leaf in ("put", "get") and receiver.endswith("blobs"):
+        return "blob store I/O (fsync)"
+    return _LEAF_LABELS.get(leaf)
+
+
+@register
+class BlockingUnderLock(Checker):
+    id = "blocking-under-lock"
+    description = ("no transport send/recv, fsync, WAL append, or jit "
+                   "compile reachable while a non-coarse serve lock is held")
+
+    def applies(self, path: str) -> bool:
+        return "repro/serve/" in path
+
+    def __init__(self) -> None:
+        self._units: List[SourceUnit] = []
+
+    def check(self, unit: SourceUnit) -> Iterable[Finding]:
+        self._units.append(unit)
+        return ()
+
+    def finalize(self) -> Iterable[Finding]:
+        graph = CallGraph.build(self._units)
+        flow = HeldLockDataflow(graph)
+        findings: List[Finding] = []
+        seen: Set[Tuple[str, str]] = set()
+        for unit in self._units:
+            coarse = unit.coarse_locks()
+            for info in graph.functions.values():
+                if info.unit is not unit or info.name == "__init__":
+                    continue
+                entry = flow.entry_held(info.qualname)
+                for call, rendered, label, lexical in _blocking_calls(info.node):
+                    hazard = sorted((lexical | entry) - coarse)
+                    if not hazard:
+                        continue
+                    locks = ", ".join(f"self.{h}" for h in hazard)
+                    finding = Finding(
+                        path=unit.path, line=call.lineno, checker=self.id,
+                        message=(f"'{info.name}' reaches blocking call "
+                                 f"'{rendered}' ({label}) while holding "
+                                 f"{locks}"))
+                    if finding.key in seen:
+                        continue
+                    seen.add(finding.key)
+                    findings.append(finding)
+        return findings
+
+
+def _blocking_calls(fn) -> Iterable[Tuple[ast.Call, str, str, frozenset]]:
+    """(call, rendered, label, lexical_held) for every blocking call in
+    `fn`'s own body.  Nested defs are skipped — they are separate
+    functions in the graph and get their own pass."""
+
+    def walk_body(body, held):
+        for stmt in body:
+            yield from walk_stmt(stmt, held)
+
+    def walk_stmt(stmt, held):
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            acquired = {name for item in stmt.items
+                        if (name := with_lock_name(item)) is not None}
+            for item in stmt.items:
+                yield from walk_expr(item.context_expr, held)
+            yield from walk_body(stmt.body, held | acquired)
+            return
+        if isinstance(stmt, (_FN_NODES[0], _FN_NODES[1], ast.ClassDef)):
+            return
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                yield from walk_expr(child, held)
+        for attr in ("body", "orelse", "finalbody"):
+            inner = getattr(stmt, attr, None)
+            if inner:
+                yield from walk_body(inner, held)
+        for handler in getattr(stmt, "handlers", []) or []:
+            yield from walk_body(handler.body, held)
+
+    def walk_expr(expr, held):
+        stack = [expr]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.Lambda, *_FN_NODES)):
+                continue  # deferred body: lexical locks don't apply
+            if isinstance(node, ast.Call):
+                rendered = dotted_name(node.func)
+                if rendered:
+                    short = (rendered[5:] if rendered.startswith("self.")
+                             else rendered)
+                    label = classify_blocking(short)
+                    if label is not None:
+                        yield node, short, label, frozenset(held)
+            stack.extend(ast.iter_child_nodes(node))
+
+    yield from walk_body(fn.body, frozenset())

@@ -1,0 +1,313 @@
+"""kernel-resources: every `pl.pallas_call` is modeled, tiled, and budgeted.
+
+The static companion to `kernels/resource_model.py`.  For each
+`pl.pallas_call` in `src/repro/kernels/` the checker verifies, on the
+AST alone:
+
+  * **model coverage** — the enclosing function has an entry in
+    `MODELED_KERNELS` (so the VMEM report in CI really covers every
+    kernel), and every model entry still matches a live pallas_call
+    (no stale rows after a kernel is renamed or deleted);
+  * **clamping discipline** — every name used as a BlockSpec tile dim
+    is derived via `min(block, _round_up(dim, tile))` or `_round_up(...)`
+    in the enclosing function (the idiom that keeps small shapes legal
+    and large blocks clamped), or is a literal int;
+  * **index-map arity** — all BlockSpec index maps take the same number
+    of grid axes (and exactly `len(grid)` when the grid is a literal
+    tuple);
+  * **f32 accumulation** — every `scratch_shapes` entry is
+    `pltpu.VMEM((...), jnp.float32)`, and every `dot_general`/`jnp.dot`
+    in the kernel body passes `preferred_element_type=jnp.float32`
+    (the bf16-input discipline: inputs may narrow, accumulators never);
+  * **VMEM budget** — the model's paper-scale estimate for the kernel
+    stays under `VMEM_BUDGET_BYTES` (pipelined, i.e. with grid-stream
+    double buffering).
+
+The byte math itself is NOT duplicated here — it lives in the resource
+model, is pinned against a live kernel's BlockSpecs by
+`tests/test_kernel_resources.py`, and is gated as a per-kernel ceiling
+in `benchmarks/baseline.json` via `check_regression.py`.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Checker, register
+from repro.analysis.source import SourceUnit, dotted_name
+
+_FN_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+@register
+class KernelResources(Checker):
+    id = "kernel-resources"
+    description = ("every pl.pallas_call is covered by the VMEM resource "
+                   "model, clamps its tiles, and accumulates in f32")
+
+    def applies(self, path: str) -> bool:
+        return "repro/kernels/" in path
+
+    def __init__(self) -> None:
+        self._modeled = self._load_model_names()
+
+    @staticmethod
+    def _load_model_names() -> Optional[Set[str]]:
+        try:
+            from repro.kernels.resource_model import MODELED_KERNELS
+        except Exception:  # pragma: no cover - model missing entirely
+            return None
+        return set(MODELED_KERNELS)
+
+    def check(self, unit: SourceUnit) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        seen_fns: Set[str] = set()
+        for fn, call in _pallas_calls(unit.tree):
+            fn_name = fn.name if fn is not None else "<module>"
+            seen_fns.add(fn_name)
+            if self._modeled is not None and fn_name not in self._modeled:
+                findings.append(Finding(
+                    path=unit.path, line=call.lineno, checker=self.id,
+                    message=(f"pallas_call in '{fn_name}' has no entry in "
+                             f"kernels/resource_model.MODELED_KERNELS — the "
+                             f"VMEM report would silently skip it")))
+            if fn is not None:
+                findings.extend(self._check_call(unit, fn, call))
+        # stale model entries: this unit defines a modeled function name
+        # with no pallas_call left inside it (per-unit, so --diff scans
+        # of other files cannot misfire).  Only kernel-implementation
+        # modules count — dispatch layers like kernels/ops.py re-export
+        # the same names without importing pallas.
+        if self._modeled is not None and _imports_pallas(unit.tree):
+            for node in ast.walk(unit.tree):
+                if (isinstance(node, _FN_NODES)
+                        and node.name in self._modeled
+                        and node.name not in seen_fns):
+                    findings.append(Finding(
+                        path=unit.path, line=node.lineno, checker=self.id,
+                        message=(f"resource model entry '{node.name}' "
+                                 f"matches no pallas_call — stale model")))
+        findings.extend(self._check_budget(unit, seen_fns))
+        return findings
+
+    # ---- per-call structural checks ---------------------------------------
+
+    def _check_call(self, unit: SourceUnit, fn, call: ast.Call
+                    ) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+        clamped = _clamped_names(fn)
+        specs = list(_blockspecs(kwargs.get("in_specs"))) \
+            + list(_blockspecs(kwargs.get("out_specs")))
+        arities: Set[int] = set()
+        for spec in specs:
+            findings.extend(self._check_spec(unit, fn, spec, clamped))
+            arity = _index_map_arity(spec)
+            if arity is not None:
+                arities.add(arity)
+        if len(arities) > 1:
+            findings.append(Finding(
+                path=unit.path, line=call.lineno, checker=self.id,
+                message=(f"'{fn.name}': BlockSpec index maps disagree on "
+                         f"grid arity ({sorted(arities)})")))
+        grid = kwargs.get("grid")
+        if isinstance(grid, ast.Tuple) and arities:
+            want = len(grid.elts)
+            if arities != {want}:
+                findings.append(Finding(
+                    path=unit.path, line=call.lineno, checker=self.id,
+                    message=(f"'{fn.name}': index map arity {sorted(arities)} "
+                             f"!= grid rank {want}")))
+        findings.extend(self._check_scratch(unit, fn,
+                                            kwargs.get("scratch_shapes")))
+        findings.extend(self._check_kernel_accum(unit, fn, call))
+        return findings
+
+    def _check_spec(self, unit: SourceUnit, fn, spec: ast.Call,
+                    clamped: Set[str]) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        shape = spec.args[0] if spec.args else None
+        if not isinstance(shape, ast.Tuple):
+            return findings
+        for dim in shape.elts:
+            if isinstance(dim, ast.Constant):
+                continue
+            if isinstance(dim, ast.Name) and dim.id in clamped:
+                continue
+            rendered = ast.unparse(dim) if hasattr(ast, "unparse") else "?"
+            findings.append(Finding(
+                path=unit.path, line=dim.lineno, checker=self.id,
+                message=(f"'{fn.name}': BlockSpec tile dim '{rendered}' is "
+                         f"not clamped via min(block, _round_up(...)) / "
+                         f"_round_up(...)")))
+        return findings
+
+    def _check_scratch(self, unit: SourceUnit, fn, scratch
+                       ) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        if not isinstance(scratch, (ast.List, ast.Tuple)):
+            return findings
+        for entry in scratch.elts:
+            if not isinstance(entry, ast.Call):
+                continue
+            name = dotted_name(entry.func)
+            if not name.endswith("VMEM"):
+                findings.append(Finding(
+                    path=unit.path, line=entry.lineno, checker=self.id,
+                    message=(f"'{fn.name}': scratch entry '{name}' is not "
+                             f"pltpu.VMEM")))
+                continue
+            dtype = entry.args[1] if len(entry.args) > 1 else None
+            rendered = dotted_name(dtype) if dtype is not None else ""
+            if not rendered.endswith("float32"):
+                findings.append(Finding(
+                    path=unit.path, line=entry.lineno, checker=self.id,
+                    message=(f"'{fn.name}': scratch accumulator dtype "
+                             f"'{rendered or '?'}' is not jnp.float32 — "
+                             f"accumulate in f32 even under bf16 inputs")))
+        return findings
+
+    def _check_kernel_accum(self, unit: SourceUnit, fn, call: ast.Call
+                            ) -> Iterable[Finding]:
+        """Every dot in the kernel body names a f32 accumulator."""
+        findings: List[Finding] = []
+        kernel_fn = _kernel_def(unit.tree, call)
+        if kernel_fn is None:
+            return findings
+        for node in ast.walk(kernel_fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if not name.endswith(("dot_general", ".dot")):
+                continue
+            pref = {kw.arg: kw.value for kw in node.keywords
+                    if kw.arg}.get("preferred_element_type")
+            rendered = dotted_name(pref) if pref is not None else ""
+            if not rendered.endswith("float32"):
+                findings.append(Finding(
+                    path=unit.path, line=node.lineno, checker=self.id,
+                    message=(f"kernel '{kernel_fn.name}' (called from "
+                             f"'{fn.name}'): '{name}' without "
+                             f"preferred_element_type=jnp.float32")))
+        return findings
+
+    # ---- budget ------------------------------------------------------------
+
+    def _check_budget(self, unit: SourceUnit, seen_fns: Set[str]
+                      ) -> Iterable[Finding]:
+        try:
+            from repro.kernels import resource_model
+        except Exception:  # pragma: no cover
+            return []
+        findings: List[Finding] = []
+        by_name = {est.kernel: est
+                   for est in resource_model.paper_scale_report()}
+        for fn_name in sorted(seen_fns & set(by_name)):
+            est = by_name[fn_name]
+            for problem in est.validate():
+                findings.append(Finding(
+                    path=unit.path, line=0, checker=self.id,
+                    message=f"paper-scale estimate: {problem}"))
+        return findings
+
+
+# ---- AST helpers -----------------------------------------------------------
+
+def _imports_pallas(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            if "pallas" in node.module:
+                return True
+        elif isinstance(node, ast.Import):
+            if any("pallas" in a.name for a in node.names):
+                return True
+    return False
+
+
+def _pallas_calls(tree: ast.Module):
+    """(enclosing_function_or_None, call) for every pl.pallas_call."""
+    def in_fn(fn):
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and dotted_name(node.func).endswith("pallas_call")):
+                yield fn, node
+
+    for node in tree.body:
+        if isinstance(node, _FN_NODES):
+            yield from in_fn(node)
+        elif isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if isinstance(item, _FN_NODES):
+                    yield from in_fn(item)
+
+
+def _blockspecs(node) -> Iterable[ast.Call]:
+    if node is None:
+        return
+    entries = node.elts if isinstance(node, (ast.List, ast.Tuple)) else [node]
+    for entry in entries:
+        if (isinstance(entry, ast.Call)
+                and dotted_name(entry.func).endswith("BlockSpec")):
+            yield entry
+
+
+def _index_map_arity(spec: ast.Call) -> Optional[int]:
+    fn = spec.args[1] if len(spec.args) > 1 else None
+    if fn is None:
+        for kw in spec.keywords:
+            if kw.arg == "index_map":
+                fn = kw.value
+    if isinstance(fn, ast.Lambda):
+        # bound defaults (lambda bh, qi, ki, g=g: ...) are closure
+        # plumbing, not grid axes
+        args = fn.args
+        return len(args.args) - len(args.defaults)
+    return None
+
+
+def _clamped_names(fn) -> Set[str]:
+    """Names assigned via the clamp idiom in `fn`:
+    `bm = min(block_m, _round_up(rows, 8))`, `n_pad = _round_up(n, 128)`,
+    including tuple-unpacked forms."""
+    def is_clamp(expr) -> bool:
+        if not isinstance(expr, ast.Call):
+            return False
+        name = dotted_name(expr.func)
+        if name.endswith("_round_up"):
+            return True
+        if name == "min":
+            return any(is_clamp(a) for a in expr.args)
+        return False
+
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        for target in node.targets:
+            if isinstance(target, ast.Name) and is_clamp(node.value):
+                out.add(target.id)
+            elif (isinstance(target, ast.Tuple)
+                  and isinstance(node.value, ast.Tuple)
+                  and len(target.elts) == len(node.value.elts)):
+                for t, v in zip(target.elts, node.value.elts):
+                    if isinstance(t, ast.Name) and is_clamp(v):
+                        out.add(t.id)
+    return out
+
+
+def _kernel_def(tree: ast.Module, call: ast.Call):
+    """Resolve the kernel function passed as pallas_call's first arg —
+    a bare name or functools.partial(_kernel, ...)."""
+    target = call.args[0] if call.args else None
+    if (isinstance(target, ast.Call)
+            and dotted_name(target.func).endswith("partial")
+            and target.args):
+        target = target.args[0]
+    if not isinstance(target, ast.Name):
+        return None
+    for node in ast.walk(tree):
+        if isinstance(node, _FN_NODES) and node.name == target.id:
+            return node
+    return None

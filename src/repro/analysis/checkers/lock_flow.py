@@ -1,0 +1,72 @@
+"""lock-flow: `# requires-lock:` contracts verified interprocedurally.
+
+lock-discipline (PR 7) TRUSTS a `# requires-lock: <lock>` annotation:
+the annotated body is analysed as if the lock were held, and nobody
+checks the callers.  This checker closes that hole with the call-graph
+dataflow engine: every same-object call to an annotated function must
+provably hold the lock — either lexically (`with self.<lock>:` around
+the call) or inherited (the caller's own entry set, solved as the
+intersection over ITS callers, includes it).
+
+    def _commit(self):
+        # requires-lock: _meta
+        self._log.append(...)
+
+    def push(self):
+        self._commit()          # <- lock-flow: '_meta' not held here
+
+Helpers and closures are covered because the engine propagates held
+sets through nested-def call edges (a closure invoked under the lock
+inherits it; a closure stored for later does not — deferred bodies
+reset the lexical held-set).
+
+Cross-object calls are exempt by construction: `other._commit()` could
+never satisfy the contract with the *caller's* `self._meta`, and
+flagging every such call would just punish code the resolver half
+understands.  Findings land at the CALL SITE (the caller is what's
+wrong), so `# analysis: allow(lock-flow)` waivers go next to the call.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List
+
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.dataflow import HeldLockDataflow
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Checker, register
+from repro.analysis.source import SourceUnit
+
+
+@register
+class LockFlow(Checker):
+    id = "lock-flow"
+    description = ("'# requires-lock:' contracts hold at every same-object "
+                   "call site (interprocedural, via the held-lock dataflow)")
+
+    def __init__(self) -> None:
+        self._units: List[SourceUnit] = []
+
+    def check(self, unit: SourceUnit) -> Iterable[Finding]:
+        self._units.append(unit)
+        return ()
+
+    def finalize(self) -> Iterable[Finding]:
+        graph = CallGraph.build(self._units)
+        flow = HeldLockDataflow(graph)
+        findings: List[Finding] = []
+        for v in flow.requires_violations():
+            caller = graph.functions.get(v.site.caller)
+            caller_name = caller.name if caller else v.site.caller
+            locks = ", ".join(f"'self.{m}'" for m in sorted(v.missing))
+            findings.append(Finding(
+                path=_path_of(v.site.caller), line=v.site.line,
+                checker=self.id,
+                message=(f"'{caller_name}' calls '{v.callee_name}' "
+                         f"(requires-lock) without provably holding "
+                         f"{locks}")))
+        return findings
+
+
+def _path_of(qualname: str) -> str:
+    return qualname.split("::", 1)[0]

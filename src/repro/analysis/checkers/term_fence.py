@@ -1,0 +1,251 @@
+"""term-fence: message handlers check the term before mutating state.
+
+PR 5's fencing discipline in prose: *every* replication/election RPC
+carries the sender's term, and a handler must compare it against the
+local term (rejecting stale senders) BEFORE mutating any
+`_meta`-guarded registry state — otherwise a deposed leader's delayed
+message can rewind committed history.  This checker machine-checks the
+prose over `replication.py` / `election.py`:
+
+  * **handlers** are methods named `handle`, `_handle*`, or `_on_*` in
+    the scanned files;
+  * **fenced state** is every attribute annotated `# guarded-by: _meta`
+    anywhere in the scanned units;
+  * a **fence** is any comparison whose rendered operand mentions
+    ``term`` (`msg["term"] < self.term`, `sender_term < self.term`) or
+    ``role``/``state`` (`self.role != "leader"` — a role check is a
+    one-hop term check, since the role flips exactly when a higher term
+    is adopted).
+
+Each function gets a summary by walking its statements in source order:
+does it fence before its first fenced-state mutation?  Summaries
+propagate through resolved calls (same-object AND unique-name
+cross-object, because an elector fencing for `self.reg` is the real
+protocol shape):
+
+  * calling a function that fences counts as fencing;
+  * calling a function with an unfenced mutation, while unfenced,
+    is a violation attributed to the handler's call line.
+
+A fence anywhere earlier in source order counts even if it sits in a
+conditional — the checker proves "the author thought about terms
+before touching state", not full path sensitivity; the runtime tests
+(`tests/test_replication.py`, chaos seeds) own the path-sensitive half.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import CallGraph, FunctionInfo, _FN_NODES
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Checker, register
+from repro.analysis.source import SourceUnit, dotted_name, self_attr
+
+_MUTATORS = {
+    "append", "extend", "insert", "remove", "pop", "popitem", "clear",
+    "update", "setdefault", "add", "discard",
+}
+_FENCE_WORDS = ("term", "role", "state")
+
+
+@dataclass
+class _Summary:
+    fences: bool                       # fences before any own mutation
+    unfenced: Optional[Tuple[int, str]]  # (line, what) first unfenced mutation
+
+
+@register
+class TermFence(Checker):
+    id = "term-fence"
+    description = ("replication/election message handlers compare the "
+                   "message term/role before mutating _meta-guarded state")
+
+    def applies(self, path: str) -> bool:
+        return path.endswith(("replication.py", "election.py"))
+
+    def __init__(self) -> None:
+        self._units: List[SourceUnit] = []
+
+    def check(self, unit: SourceUnit) -> Iterable[Finding]:
+        self._units.append(unit)
+        return ()
+
+    def finalize(self) -> Iterable[Finding]:
+        if not self._units:
+            return ()
+        graph = CallGraph.build(self._units)
+        meta_fields = _meta_guarded_fields(self._units)
+        summaries: Dict[str, _Summary] = {}
+        findings: List[Finding] = []
+        for info in graph.functions.values():
+            if not info.is_handler_like:
+                continue
+            summary = _summarize(info.qualname, graph, meta_fields,
+                                 summaries, set())
+            if summary.unfenced is not None:
+                line, what = summary.unfenced
+                findings.append(Finding(
+                    path=info.path, line=line, checker=self.id,
+                    message=(f"handler '{info.name}' mutates _meta-guarded "
+                             f"state ({what}) before any term/role fence")))
+        return findings
+
+
+def _meta_guarded_fields(units: List[SourceUnit]) -> Set[str]:
+    fields: Set[str] = set()
+    for unit in units:
+        guards = unit.guarded_lines()
+        for node in ast.walk(unit.tree):
+            targets: List[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign):
+                targets = [node.target]
+            else:
+                continue
+            lock = guards.get(node.lineno) or guards.get(
+                getattr(node, "end_lineno", node.lineno) or node.lineno)
+            if lock != "_meta":
+                continue
+            for t in targets:
+                attr = self_attr(t)
+                if attr is not None:
+                    fields.add(attr)
+    return fields
+
+
+def _summarize(qualname: str, graph: CallGraph, meta_fields: Set[str],
+               memo: Dict[str, _Summary], in_progress: Set[str]) -> _Summary:
+    if qualname in memo:
+        return memo[qualname]
+    if qualname in in_progress:
+        # cycle: optimistic (no unfenced mutation proven yet on this path)
+        return _Summary(fences=False, unfenced=None)
+    in_progress.add(qualname)
+    info = graph.functions[qualname]
+    calls_by_line: Dict[int, List[str]] = {}
+    for site in graph.calls_from(qualname):
+        calls_by_line.setdefault(site.line, []).append(site.callee)
+
+    state = {"fenced": False, "unfenced": None, "fences_at_all": False}
+
+    def note_mutation(line: int, what: str) -> None:
+        if not state["fenced"] and state["unfenced"] is None:
+            state["unfenced"] = (line, what)
+
+    def visit_expr(expr: ast.expr) -> None:
+        stack = [expr]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.Lambda, *_FN_NODES)):
+                continue
+            if isinstance(node, ast.Compare) and _is_fence(node):
+                state["fenced"] = True
+                state["fences_at_all"] = True
+            if isinstance(node, ast.Call):
+                _visit_call(node)
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _visit_call(node: ast.Call) -> None:
+        func = node.func
+        if (isinstance(func, ast.Attribute) and func.attr in _MUTATORS):
+            attr = self_attr(func.value)
+            if attr in meta_fields:
+                note_mutation(node.lineno, f"self.{attr}.{func.attr}()")
+        for callee in calls_by_line.get(node.lineno, []):
+            if callee == qualname:
+                continue
+            sub = _summarize(callee, graph, meta_fields, memo, in_progress)
+            if sub.unfenced is not None and not state["fenced"]:
+                short = callee.rsplit("::", 1)[-1]
+                note_mutation(node.lineno,
+                              f"{sub.unfenced[1]} via '{short}'")
+            if sub.fences:
+                state["fenced"] = True
+
+    def visit_target(target: ast.expr, line: int) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                visit_target(elt, line)
+            return
+        node = target
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        attr = self_attr(node)
+        if attr in meta_fields:
+            note_mutation(line, f"self.{attr}")
+
+    def visit_body(body) -> None:
+        for stmt in body:
+            visit_stmt(stmt)
+
+    def visit_stmt(stmt: ast.stmt) -> None:
+        if isinstance(stmt, (_FN_NODES[0], _FN_NODES[1], ast.ClassDef)):
+            return
+        if isinstance(stmt, ast.Assign):
+            visit_expr(stmt.value)
+            for t in stmt.targets:
+                visit_target(t, stmt.lineno)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                visit_expr(stmt.value)
+                visit_target(stmt.target, stmt.lineno)
+        elif isinstance(stmt, ast.AugAssign):
+            visit_expr(stmt.value)
+            visit_target(stmt.target, stmt.lineno)
+        elif isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                visit_target(t, stmt.lineno)
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    visit_expr(child)
+        for attr in ("body", "orelse", "finalbody"):
+            inner = getattr(stmt, attr, None)
+            if inner:
+                visit_body(inner)
+        for handler in getattr(stmt, "handlers", []) or []:
+            visit_body(handler.body)
+
+    visit_body(info.node.body)
+    in_progress.discard(qualname)
+    summary = _Summary(
+        fences=state["fences_at_all"] and state["unfenced"] is None,
+        unfenced=state["unfenced"])
+    memo[qualname] = summary
+    return summary
+
+
+def _is_fence(node: ast.Compare) -> bool:
+    for operand in [node.left, *node.comparators]:
+        if _mentions_fence_word(operand):
+            return True
+    return False
+
+
+def _mentions_fence_word(node: ast.AST) -> bool:
+    rendered = dotted_name(node)
+    if rendered and any(w in rendered.lower() for w in _FENCE_WORDS):
+        return True
+    if isinstance(node, ast.Subscript):
+        sl = node.slice
+        if (isinstance(sl, ast.Constant) and isinstance(sl.value, str)
+                and any(w in sl.value.lower() for w in _FENCE_WORDS)):
+            return True
+        return _mentions_fence_word(node.value)
+    if isinstance(node, ast.Call):
+        # int(msg["term"]), msg.get("term", 0)
+        if any(_mentions_fence_word(a) for a in node.args):
+            return True
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "get"
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)
+                and any(w in node.args[0].value.lower()
+                        for w in _FENCE_WORDS)):
+            return True
+    return False

@@ -1,0 +1,113 @@
+"""Held-lock dataflow over the call graph.
+
+The quantity every interprocedural checker needs is: *which locks are
+guaranteed held when function `f` starts executing?*  With
+
+  * ``declared(f)``   — locks `f` names in `# requires-lock:` comments,
+  * ``held(s)``       — locks lexically held at call site `s`,
+
+the entry set is the greatest solution of
+
+    entry(f) = declared(f)  ∪  ⋂ over same-object call sites s of f
+                                  ( held(s) ∪ entry(caller(s)) )
+
+i.e. a lock is guaranteed at entry iff the function demands it itself
+or EVERY same-object caller provably holds it at the call.  Functions
+with no same-object callers (public API, cross-object targets, dead
+code) get just their declared set — we can't assume anything about
+callers we can't see.
+
+The solver starts every called function at TOP (all locks in the
+universe) and shrinks sets until fixpoint.  Since `∪`/`⋂` are monotone
+on the finite powerset lattice this terminates, and because union
+distributes over intersection, on acyclic call graphs the fixpoint
+equals the path-enumeration semantics ("intersect over all call paths
+of the union of locks acquired along the path") — the property the
+hypothesis test in tests/test_analysis_dataflow.py checks against a
+brute-force reference interpreter.
+
+On top of entry sets, `requires_violations()` verifies every
+`# requires-lock:` contract at its call sites: a same-object call to an
+annotated function made without the lock (lexically or inherited) is
+exactly the interprocedural guarded-by violation PR 7's lexical
+checkers could not see.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List
+
+from repro.analysis.callgraph import CallGraph, CallSite
+
+
+@dataclass
+class RequiresViolation:
+    """A call site that does not satisfy the callee's lock contract."""
+    site: CallSite
+    missing: FrozenSet[str]        # declared locks not provably held
+    callee_name: str               # short name for the message
+
+
+class HeldLockDataflow:
+    """Solved entry-held sets for every function in a `CallGraph`."""
+
+    def __init__(self, graph: CallGraph):
+        self.graph = graph
+        self.entry: Dict[str, FrozenSet[str]] = {}
+        self._solve()
+
+    # ---- public API --------------------------------------------------------
+
+    def entry_held(self, qualname: str) -> FrozenSet[str]:
+        """Locks guaranteed held when `qualname` begins executing."""
+        return self.entry.get(qualname, frozenset())
+
+    def effective_held(self, site: CallSite) -> FrozenSet[str]:
+        """Locks held at a specific call site: lexical ∪ caller entry."""
+        return site.held | self.entry_held(site.caller)
+
+    def requires_violations(self) -> List[RequiresViolation]:
+        out: List[RequiresViolation] = []
+        for site in self.graph.calls:
+            if not site.same_object:
+                # a different object's `self._lock` is a different lock:
+                # the caller cannot satisfy the contract by name
+                continue
+            callee = self.graph.functions.get(site.callee)
+            if callee is None or not callee.declared:
+                continue
+            caller = self.graph.functions.get(site.caller)
+            if caller is not None and caller.name == "__init__":
+                continue  # construction precedes sharing
+            missing = callee.declared - self.effective_held(site)
+            if missing:
+                out.append(RequiresViolation(
+                    site=site, missing=frozenset(missing),
+                    callee_name=callee.name))
+        return out
+
+    # ---- solver ------------------------------------------------------------
+
+    def _solve(self) -> None:
+        universe = self.graph.lock_universe
+        callers: Dict[str, List[CallSite]] = {}
+        for site in self.graph.calls:
+            if site.same_object and site.caller != site.callee:
+                callers.setdefault(site.callee, []).append(site)
+        for q, info in self.graph.functions.items():
+            top = universe if q in callers else frozenset()
+            self.entry[q] = info.declared | top
+        changed = True
+        while changed:
+            changed = False
+            for q, sites in callers.items():
+                declared = self.graph.functions[q].declared
+                meet = None
+                for s in sites:
+                    held = s.held | self.entry[s.caller]
+                    meet = held if meet is None else (meet & held)
+                new = declared | (meet or frozenset())
+                if new != self.entry[q]:
+                    self.entry[q] = new
+                    changed = True

@@ -47,6 +47,7 @@ def scan(paths: Iterable[str],
     """Run all (or the named) checkers over every .py file under `paths`."""
     checkers = all_checkers(checker_ids)
     result = ScanResult()
+    units = {}
     for file_path in iter_python_files(paths):
         try:
             with open(file_path, "r", encoding="utf-8") as f:
@@ -64,6 +65,7 @@ def scan(paths: Iterable[str],
                 path=file_path, line=exc.lineno or 0, checker="parse",
                 message=f"syntax error: {exc.msg}"))
             continue
+        units[unit.path] = unit
         for checker in checkers:
             if not checker.applies(unit.path):
                 continue
@@ -72,6 +74,12 @@ def scan(paths: Iterable[str],
                     continue  # explicit `# analysis: allow(id)` waiver
                 result.findings.append(finding)
     for checker in checkers:
-        result.findings.extend(checker.finalize())
+        for finding in checker.finalize():
+            # cross-file checkers emit from finalize(); their findings
+            # honor the same per-line `# analysis: allow(id)` waivers
+            unit = units.get(finding.path)
+            if unit is not None and unit.allows(finding.line, finding.checker):
+                continue
+            result.findings.append(finding)
     result.findings.sort()
     return result

@@ -19,6 +19,7 @@ from typing import Dict, Optional
 _GUARDED_BY = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
 _REQUIRES_LOCK = re.compile(r"#\s*requires-lock:\s*([A-Za-z_]\w*)")
 _ALLOW = re.compile(r"#\s*analysis:\s*allow\(\s*([a-z0-9-]+)\s*\)")
+_COARSE_LOCK = re.compile(r"#\s*coarse-lock\b")
 
 
 @dataclass
@@ -67,6 +68,36 @@ class SourceUnit:
         """True if `line` carries `# analysis: allow(<checker_id>)`."""
         m = _ALLOW.search(self.comments.get(line, ""))
         return bool(m and m.group(1) == checker_id)
+
+    def coarse_locks(self) -> set:
+        """Lock attribute names whose creation line carries `# coarse-lock`.
+
+        A coarse lock is DESIGNED to be held across I/O (e.g. the
+        replication `_mutate` lock serializing append + broadcast +
+        quorum wait, or the WAL lock serializing append + fsync so ack
+        order equals durable order).  The blocking-under-lock checker
+        exempts them: the annotation is the reviewed, in-source record
+        of that latency trade.  Attribute names are extracted from
+        `self.<name> = ...` assignments on annotated lines.
+        """
+        out: set = set()
+        annotated = {line for line, comment in self.comments.items()
+                     if _COARSE_LOCK.search(comment)}
+        if not annotated:
+            return out
+        for node in ast.walk(self.tree):
+            if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                continue
+            lines = {node.lineno, getattr(node, "end_lineno", node.lineno)}
+            if not lines & annotated:
+                continue
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                attr = self_attr(t)
+                if attr is not None:
+                    out.add(attr)
+        return out
 
 
 def _comments(text: str) -> Dict[int, str]:

@@ -1,0 +1,273 @@
+"""Static VMEM resource model for the Pallas kernels.
+
+The paper's headline is a *resource* result — the adaptive stage halves
+hardware cost at equal accuracy — yet until this module nothing in the
+repo could state, before a kernel ran, how much VMEM a `pl.pallas_call`
+commits.  This model mirrors each wrapper's exact clamp/pad arithmetic
+(`min(block, _round_up(dim, tile))`, same defaults) and prices the
+per-grid-step buffer set:
+
+  * one block per BlockSpec (in and out), at the spec's dtype;
+  * every scratch buffer (f32 accumulators by repo discipline);
+  * each buffer rounded up to the physical VMEM tile for its dtype —
+    the lane dimension allocates in units of 128, the sublane dimension
+    in units of 8/16/32 for 4/2/1-byte dtypes, so a (cq, 1) running-max
+    column really occupies (cq, 128) lanes.
+
+Two numbers per kernel:
+
+  * `vmem_bytes`           — single-buffered residency (tiles + scratch);
+  * `vmem_pipelined_bytes` — upper bound with Mosaic's double-buffered
+    grid streaming (in/out tiles counted twice, scratch once).  This is
+    the number gated against `VMEM_BUDGET_BYTES` and the baseline.
+
+Deliberately dependency-free (no jax import): the static-analysis
+checker and CI import it to audit kernels without touching a device.
+`python -m repro.kernels.resource_model --json FILE` emits the
+paper-scale report rows `check_regression.py` gates as ceilings.
+
+Keep in sync with the kernel wrappers — the `kernel-resources` checker
+fails if a `pl.pallas_call` appears in a function this model does not
+know, and `tests/test_kernel_resources.py` pins the fused_transform
+estimate against the real BlockSpecs/scratch of a live call.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+# ~16 MiB of VMEM per TensorCore (v4/v5 generations); a kernel whose
+# pipelined working set exceeds this cannot be scheduled at all.
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
+
+# physical allocation granularity: (sublane, lane) per dtype byte-width
+_MIN_TILE = {4: (8, 128), 2: (16, 128), 1: (32, 128)}
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@dataclass(frozen=True)
+class Buffer:
+    """One VMEM allocation of a pallas_call grid step."""
+    name: str
+    shape: Tuple[int, ...]
+    dtype_bytes: int
+    kind: str                       # "in" | "out" | "scratch"
+
+    @property
+    def bytes(self) -> int:
+        """Physical bytes: trailing two dims rounded to the dtype's
+        (sublane, lane) tile; leading dims multiply through."""
+        sub, lane = _MIN_TILE[self.dtype_bytes]
+        dims = list(self.shape)
+        while len(dims) < 2:
+            dims.insert(0, 1)
+        dims[-1] = _round_up(dims[-1], lane)
+        dims[-2] = _round_up(dims[-2], sub)
+        total = 1
+        for d in dims:
+            total *= d
+        return total * self.dtype_bytes
+
+
+@dataclass
+class KernelEstimate:
+    kernel: str
+    grid: Tuple[int, ...]
+    buffers: List[Buffer]
+    blocks: Dict[str, int] = field(default_factory=dict)  # effective tiles
+
+    @property
+    def grid_steps(self) -> int:
+        total = 1
+        for g in self.grid:
+            total *= g
+        return total
+
+    @property
+    def vmem_bytes(self) -> int:
+        return sum(b.bytes for b in self.buffers)
+
+    @property
+    def vmem_pipelined_bytes(self) -> int:
+        """Streamed in/out tiles double-buffer across grid steps; scratch
+        persists single-buffered.  Upper bound: assumes every in/out
+        spec streams (a constant index map would not)."""
+        streamed = sum(b.bytes for b in self.buffers if b.kind != "scratch")
+        return self.vmem_bytes + streamed
+
+    def validate(self) -> List[str]:
+        """Human-readable discipline violations (empty = clean)."""
+        problems: List[str] = []
+        for b in self.buffers:
+            sub, lane = _MIN_TILE[b.dtype_bytes]
+            minor = b.shape[-1] if b.shape else 1
+            second = b.shape[-2] if len(b.shape) >= 2 else 1
+            if minor != 1 and minor % lane:
+                problems.append(
+                    f"{self.kernel}.{b.name}: lane dim {minor} not a "
+                    f"multiple of {lane}")
+            if second != 1 and second % sub:
+                problems.append(
+                    f"{self.kernel}.{b.name}: sublane dim {second} not a "
+                    f"multiple of {sub}")
+        if self.vmem_pipelined_bytes > VMEM_BUDGET_BYTES:
+            problems.append(
+                f"{self.kernel}: pipelined VMEM {self.vmem_pipelined_bytes} "
+                f"exceeds budget {VMEM_BUDGET_BYTES}")
+        return problems
+
+    def to_row(self) -> dict:
+        return {
+            "name": f"analysis/kernel_resources/{self.kernel}",
+            "vmem_bytes": self.vmem_bytes,
+            "vmem_pipelined_bytes": self.vmem_pipelined_bytes,
+            "grid_steps": self.grid_steps,
+        }
+
+
+# ---- per-kernel estimators (mirror the wrappers' clamp math EXACTLY) ------
+
+def fused_transform_estimate(rows: int, m: int, p: int, n: int, *,
+                             block_m: int = 128, block_p: int = 128,
+                             block_k: int = 512,
+                             dtype_bytes: int = 4) -> KernelEstimate:
+    """kernels/fused_transform.py: out = (scale · x Rᵀ) Bᵀ in one call."""
+    bm = min(block_m, _round_up(rows, 8))
+    bp = min(block_p, _round_up(p, 128))
+    bk = min(block_k, _round_up(m, 128))
+    n_pad = _round_up(n, 128)
+    grid = (_round_up(rows, bm) // bm, _round_up(p, bp) // bp,
+            _round_up(m, bk) // bk)
+    return KernelEstimate(
+        kernel="fused_transform", grid=grid,
+        blocks={"bm": bm, "bp": bp, "bk": bk, "n_pad": n_pad},
+        buffers=[
+            Buffer("x", (bm, bk), dtype_bytes, "in"),
+            Buffer("r_int8", (bp, bk), 1, "in"),
+            Buffer("b_mat", (n_pad, bp), dtype_bytes, "in"),
+            Buffer("out", (bm, n_pad), dtype_bytes, "out"),
+            Buffer("y_scratch", (bm, bp), 4, "scratch"),
+        ])
+
+
+def ternary_matmul_estimate(rows: int, m: int, p: int, *,
+                            block_m: int = 128, block_p: int = 128,
+                            block_k: int = 512,
+                            dtype_bytes: int = 4) -> KernelEstimate:
+    """kernels/ternary_matmul.py: y = scale · x Rᵀ with int8 R tiles."""
+    bm = min(block_m, _round_up(rows, 8))
+    bp = min(block_p, _round_up(p, 128))
+    bk = min(block_k, _round_up(m, 128))
+    grid = (_round_up(rows, bm) // bm, _round_up(p, bp) // bp,
+            _round_up(m, bk) // bk)
+    return KernelEstimate(
+        kernel="ternary_matmul", grid=grid,
+        blocks={"bm": bm, "bp": bp, "bk": bk},
+        buffers=[
+            Buffer("x", (bm, bk), dtype_bytes, "in"),
+            Buffer("r_int8", (bp, bk), 1, "in"),
+            Buffer("out", (bm, bp), dtype_bytes, "out"),
+        ])
+
+
+def easi_apply_estimate(n: int, m: int, batch: int, *,
+                        block_m: int = 512,
+                        dtype_bytes: int = 4) -> KernelEstimate:
+    """kernels/easi_update.py: one EASI step, Y resident, B tiled on m."""
+    n_pad = _round_up(n, 128)
+    b_pad = _round_up(batch, 8)
+    bm = min(block_m, _round_up(m, 128))
+    grid = (_round_up(m, bm) // bm,)
+    return KernelEstimate(
+        kernel="easi_apply", grid=grid,
+        blocks={"bm": bm, "n_pad": n_pad, "b_pad": b_pad},
+        buffers=[
+            Buffer("y", (b_pad, n_pad), dtype_bytes, "in"),
+            Buffer("b_mat", (n_pad, bm), dtype_bytes, "in"),
+            Buffer("out", (n_pad, bm), dtype_bytes, "out"),
+            Buffer("g_scratch", (n_pad, n_pad), 4, "scratch"),
+        ])
+
+
+def flash_attention_estimate(batch: int, sq: int, skv: int, hq: int,
+                             hkv: int, dh: int, *,
+                             q_chunk: int = 512, kv_chunk: int = 512,
+                             dtype_bytes: int = 4) -> KernelEstimate:
+    """kernels/flash_attention.py: streaming softmax(QKᵀ)V forward."""
+    cq = min(q_chunk, _round_up(sq, 8))
+    ck = min(kv_chunk, _round_up(skv, 128))
+    dh_p = _round_up(dh, 128)
+    grid = (batch * hq, _round_up(sq, cq) // cq, _round_up(skv, ck) // ck)
+    return KernelEstimate(
+        kernel="flash_attention_fwd", grid=grid,
+        blocks={"cq": cq, "ck": ck, "dh_p": dh_p},
+        buffers=[
+            Buffer("q", (1, cq, dh_p), dtype_bytes, "in"),
+            Buffer("k", (1, ck, dh_p), dtype_bytes, "in"),
+            Buffer("v", (1, ck, dh_p), dtype_bytes, "in"),
+            Buffer("out", (1, cq, dh_p), dtype_bytes, "out"),
+            Buffer("acc_scratch", (cq, dh_p), 4, "scratch"),
+            Buffer("m_scratch", (cq, 1), 4, "scratch"),
+            Buffer("l_scratch", (cq, 1), 4, "scratch"),
+        ])
+
+
+# function name containing the `pl.pallas_call` -> estimator; the
+# kernel-resources checker cross-references this against the AST so a
+# new kernel cannot land without a model entry (and a stale entry
+# cannot outlive its kernel)
+MODELED_KERNELS: Dict[str, Callable[..., KernelEstimate]] = {
+    "fused_transform": fused_transform_estimate,
+    "ternary_matmul": ternary_matmul_estimate,
+    "easi_apply": easi_apply_estimate,
+    "flash_attention_fwd": flash_attention_estimate,
+}
+
+
+def paper_scale_report() -> List[KernelEstimate]:
+    """Each kernel priced at paper scale: the DR path at the waveform
+    Table II pair (m=32, p=16, n=8 — `configs.waveform_paper`) under the
+    largest serving bucket (1024 rows, `serve.batching.BucketPolicy`);
+    flash attention at a representative LM serving shape."""
+    return [
+        fused_transform_estimate(rows=1024, m=32, p=16, n=8),
+        ternary_matmul_estimate(rows=1024, m=32, p=16),
+        easi_apply_estimate(n=8, m=16, batch=1024),
+        flash_attention_estimate(batch=1, sq=1024, skv=1024,
+                                 hq=8, hkv=8, dh=64),
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.kernels.resource_model",
+        description="static per-grid-step VMEM report for the Pallas kernels")
+    ap.add_argument("--json", metavar="FILE",
+                    help="write check_regression-compatible rows to FILE")
+    args = ap.parse_args(argv)
+    estimates = paper_scale_report()
+    problems: List[str] = []
+    for est in estimates:
+        problems.extend(est.validate())
+        row = est.to_row()
+        print(f"{row['name']:<48} grid={est.grid} "
+              f"vmem={est.vmem_bytes:>9,}B "
+              f"pipelined={est.vmem_pipelined_bytes:>9,}B")
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump([est.to_row() for est in estimates], f, indent=2)
+            f.write("\n")
+    for p in problems:
+        print(f"VIOLATION: {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -136,7 +136,7 @@ class WriteAheadLog:
     def __init__(self, path: str, *, fsync: bool = True):
         self.path = path
         self.fsync = fsync
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()  # coarse-lock: append+fsync serialize so ack order == durable order
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self.records: List[Any] = self._recover()  # guarded-by: _lock
         self._f = open(path, "ab")  # guarded-by: _lock

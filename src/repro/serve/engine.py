@@ -408,6 +408,33 @@ class DRService:
                                 rows=rows, max_delay_ms=max_delay_ms)
 
     # ---- train-while-serve -------------------------------------------------
+    def _fused_update_fn(self, snap: Snapshot, x: jax.Array):
+        """Fetch (or build) the jitted fused transform+update program for
+        this (config, batch shape) — and make sure a cache miss pays its
+        trace+compile HERE, not at first real use.  `jax.jit` is lazy, so
+        the builder drives one dummy batch (zeros, result discarded)
+        through the fresh program before returning it.
+
+        Called OUTSIDE the per-name train-while-serve lock on purpose:
+        holding `_tws_lock(name)` across a multi-second jit compile would
+        convoy every concurrent `serve_and_update`/`promote` for the name
+        behind one cold shape (the blocking-under-lock hazard the
+        analysis suite now flags).  The build closes over the model
+        CONFIG only — live/staged states are call arguments."""
+        key = ("fused", snap.chash, x.shape, str(x.dtype))
+        model = snap.model  # close over the config only, never the state
+        state = snap.state
+
+        def build():
+            fn = jax.jit(
+                lambda live, st, xb: (model.transform(live, xb),
+                                      model.update(st, xb)))
+            jax.block_until_ready(
+                fn(state, state, jnp.zeros_like(x)))
+            return fn
+
+        return self.cache.get_or_build(key, build)
+
     def serve_and_update(self, name: str, x: jax.Array) -> jax.Array:
         """Answer `x` with the LIVE state and stream it through
         `model.update` into the STAGED state (every `1/update_fraction`-th
@@ -415,32 +442,38 @@ class DRService:
         staged state chains across calls, so a full stream followed by
         `promote()` equals an offline `fit` with the same block order.
 
-        Runs under the per-name train-while-serve lock: the snapshot read,
-        the update, and the staged write are one atomic step w.r.t. a
-        concurrent `promote()` — updates for the same name serialize (they
-        must: staged states chain), different names stream in parallel."""
+        The update step runs under the per-name train-while-serve lock:
+        the snapshot read, the update, and the staged write are one atomic
+        step w.r.t. a concurrent `promote()` — updates for the same name
+        serialize (they must: staged states chain), different names stream
+        in parallel.  The fused program is built BEFORE the lock (see
+        `_fused_update_fn`); a `register(replace=True)` racing the
+        pre-build is detected by config-hash mismatch under the lock and
+        rebuilt there (rare, waived)."""
+        snap0 = self.registry.get(name)
+        self._check_request(snap0, x)
+        if snap0.ensemble:
+            raise NotImplementedError(
+                "train-while-serve targets single models; ensembles are "
+                "serve-only (fit them offline via DREnsemble.fit)")
+        with self._tws_guard:
+            acc = self._accum.get(name, 0.0) + self.update_fraction
+            skip = acc < 1.0 - 1e-9
+            self._accum[name] = acc if skip else acc - 1.0
+        if skip:                                # no update on this block
+            return self._serve_rows(snap0, x)
+
+        fused = self._fused_update_fn(snap0, x)
         with self._tws_lock(name):
             snap = self.registry.get(name)
-            self._check_request(snap, x)
-            if snap.ensemble:
-                raise NotImplementedError(
-                    "train-while-serve targets single models; ensembles are "
-                    "serve-only (fit them offline via DREnsemble.fit)")
-            with self._tws_guard:
-                acc = self._accum.get(name, 0.0) + self.update_fraction
-                skip = acc < 1.0 - 1e-9
-                self._accum[name] = acc if skip else acc - 1.0
-            if skip:                            # no update on this block
-                return self._serve_rows(snap, x)
-
+            if snap.chash != snap0.chash:
+                # a replace raced the pre-build: re-validate and rebuild
+                # for the new config (compiles under the lock — reviewed:
+                # losing this race is as rare as the replace itself)
+                self._check_request(snap, x)
+                fused = self._fused_update_fn(snap, x)  # analysis: allow(blocking-under-lock)
             with self._tws_guard:
                 staged = self._staged.get(name, snap.state)
-            key = ("fused", snap.chash, x.shape, str(x.dtype))
-            model = snap.model  # close over the config only, never the state
-            fused = self.cache.get_or_build(
-                key, lambda: jax.jit(
-                    lambda live, st, xb: (model.transform(live, xb),
-                                          model.update(st, xb))))
             y, new_staged = fused(snap.state, staged, x)
             with self._tws_guard:
                 self._staged[name] = new_staged

@@ -161,7 +161,7 @@ class ReplicatedRegistry:
         # is never held across transport I/O, so pull/status handlers from
         # peers can always be answered while a broadcast is in flight —
         # holding one lock across both is how a TCP fleet deadlocks.
-        self._mutate = threading.RLock()
+        self._mutate = threading.RLock()  # coarse-lock: append+broadcast+quorum serialize by design
         self._meta = threading.RLock()
         self._log: Dict[str, List[Op]] = {}  # guarded-by: _meta
         self._applied: Dict[str, int] = {}  # guarded-by: _meta (name -> last applied seq)
@@ -656,6 +656,17 @@ class ReplicatedRegistry:
         ops = bundle.get("ops", {})
         resets = set(bundle.get("reset", ()))
         sender_term = bundle.get("term")
+        # Fence the WHOLE bundle up front, not just per-op: `_apply`
+        # checks the sender term on every op, but a reset with no ops
+        # (the phantom-drop path below) never reaches `_apply` — without
+        # this gate a deposed leader's stale pull reply could drop a
+        # name the NEW leader has since committed.
+        if sender_term is not None:
+            with self._meta:
+                if sender_term < self.term:
+                    raise _Fenced(
+                        f"stale bundle from term {sender_term} rejected: "
+                        f"this host has seen term {self.term}")
         applied = 0
         for name, missing in ops.items():
             if name in resets:

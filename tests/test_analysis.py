@@ -406,10 +406,12 @@ def test_syntax_error_is_a_parse_finding(tmp_path):
     assert len(found) == 1 and found[0].checker == "parse"
 
 
-def test_registry_has_the_five_checkers():
+def test_registry_has_the_nine_checkers():
     ids = {c.id for c in all_checkers()}
     assert {"lock-discipline", "lock-order", "clock-discipline",
-            "jit-hygiene", "fsync-before-ack"} <= ids
+            "jit-hygiene", "fsync-before-ack",
+            "lock-flow", "blocking-under-lock", "term-fence",
+            "kernel-resources"} <= ids
 
 
 def test_unknown_checker_id_raises():

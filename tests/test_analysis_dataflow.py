@@ -1,0 +1,697 @@
+"""The interprocedural analysis layer: call graph, held-lock dataflow,
+and the three checkers built on it (lock-flow, blocking-under-lock,
+term-fence), plus the CLI's multi-root and --diff modes.
+
+The load-bearing test is the hypothesis property: random DAG call
+programs with lock acquisitions, asserting the fixpoint engine's entry
+sets equal a brute-force reference interpreter that enumerates every
+call path (sound because union distributes over intersection — see
+`repro.analysis.dataflow`'s module docstring).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+try:                                # offline env — CI installs hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.analysis import scan
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.dataflow import HeldLockDataflow
+from repro.analysis.source import SourceUnit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _write(tmp_path, rel, code):
+    p = tmp_path
+    for part in rel.split("/")[:-1]:
+        p = p / part
+    p.mkdir(parents=True, exist_ok=True)
+    p = p / rel.split("/")[-1]
+    p.write_text(textwrap.dedent(code))
+    return str(p)
+
+
+def _serve_file(tmp_path, name, code):
+    return _write(tmp_path, f"repro/serve/{name}", code)
+
+
+def _findings(paths, checker):
+    if isinstance(paths, str):
+        paths = [paths]
+    return [f for f in scan(paths).findings if f.checker == checker]
+
+
+def _graph_of(code, path="repro/serve/mod.py"):
+    unit = SourceUnit.parse(path, textwrap.dedent(code))
+    return CallGraph.build([unit])
+
+
+def _run_cli(*args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd or REPO, env=env,
+        timeout=120)
+
+
+# ---------------------------------------------------------------------------
+# call graph resolution
+# ---------------------------------------------------------------------------
+
+def test_callgraph_resolves_self_bare_and_nested_calls():
+    graph = _graph_of("""
+        def helper():
+            pass
+
+        class S:
+            def outer(self):
+                def closure():
+                    self.target()
+                closure()          # call above... no: below the def
+                helper()
+                self.target()
+
+            def target(self):
+                pass
+    """)
+    edges = {(c.caller.rsplit("::", 1)[1], c.callee.rsplit("::", 1)[1])
+             for c in graph.calls}
+    assert ("S.outer", "S.outer.<closure>") in edges
+    assert ("S.outer", "helper") in edges
+    assert ("S.outer", "S.target") in edges
+    assert ("S.outer.<closure>", "S.target") in edges
+
+
+def test_callgraph_nested_def_resolves_even_when_called_before_def():
+    graph = _graph_of("""
+        class S:
+            def outer(self):
+                if True:
+                    run()          # lexically above the nested def
+                def run():
+                    pass
+    """)
+    assert any(c.callee.endswith("<run>") for c in graph.calls)
+
+
+def test_callgraph_unique_method_name_resolves_cross_object():
+    graph = _graph_of("""
+        class A:
+            def only_here(self):
+                pass
+
+        class B:
+            def go(self, other):
+                other.only_here()
+    """)
+    (edge,) = [c for c in graph.calls if c.callee.endswith("only_here")]
+    assert edge.same_object is False
+
+
+def test_callgraph_ambiguous_method_name_is_not_resolved():
+    graph = _graph_of("""
+        class A:
+            def dup(self):
+                pass
+
+        class B:
+            def dup(self):
+                pass
+
+        class C:
+            def go(self, other):
+                other.dup()
+    """)
+    assert not [c for c in graph.calls if c.caller.endswith("C.go")]
+
+
+# ---------------------------------------------------------------------------
+# held-lock dataflow
+# ---------------------------------------------------------------------------
+
+DATAFLOW_SRC = """
+    import threading
+
+    class S:
+        def __init__(self):
+            self._meta = threading.Lock()
+
+        def api_locked(self):
+            with self._meta:
+                self.helper()
+
+        def helper(self):
+            self.leaf()
+
+        def leaf(self):
+            pass
+"""
+
+
+def test_entry_sets_propagate_through_call_chains():
+    graph = _graph_of(DATAFLOW_SRC)
+    flow = HeldLockDataflow(graph)
+    assert flow.entry_held("repro/serve/mod.py::S.helper") == {"_meta"}
+    assert flow.entry_held("repro/serve/mod.py::S.leaf") == {"_meta"}
+
+
+def test_entry_set_is_intersection_over_callers():
+    # one caller holds _meta, the other does not: nothing is guaranteed
+    graph = _graph_of(DATAFLOW_SRC + """\
+        def api_unlocked(self):
+            self.helper()
+""")
+    flow = HeldLockDataflow(graph)
+    assert flow.entry_held("repro/serve/mod.py::S.helper") == frozenset()
+    assert flow.entry_held("repro/serve/mod.py::S.leaf") == frozenset()
+
+
+def test_requires_lock_infers_entry_for_transitive_callee():
+    graph = _graph_of("""
+        import threading
+
+        class S:
+            def __init__(self):
+                self._meta = threading.Lock()
+
+            def persist(self):
+                # requires-lock: _meta
+                self.write_wal()
+
+            def write_wal(self):
+                pass
+    """)
+    flow = HeldLockDataflow(graph)
+    assert flow.entry_held("repro/serve/mod.py::S.write_wal") == {"_meta"}
+
+
+def test_closure_invoked_under_lock_inherits_it():
+    graph = _graph_of("""
+        import threading
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def go(self):
+                def body():
+                    self.leaf()
+                with self._lock:
+                    body()
+
+            def leaf(self):
+                pass
+    """)
+    flow = HeldLockDataflow(graph)
+    assert flow.entry_held("repro/serve/mod.py::S.go.<body>") == {"_lock"}
+    assert flow.entry_held("repro/serve/mod.py::S.leaf") == {"_lock"}
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: engine fixpoint == path-enumeration reference interpreter
+# ---------------------------------------------------------------------------
+
+LOCKS = ["_a", "_b", "_c"]
+
+
+def _render_program(fns):
+    lines = ["import threading", "", "class S:",
+             "    def __init__(self):"]
+    for lock in LOCKS:
+        lines.append(f"        self.{lock} = threading.Lock()")
+    for i, (declared, calls) in enumerate(fns):
+        lines.append(f"    def f{i}(self):")
+        for lock in declared:
+            lines.append(f"        # requires-lock: {lock}")
+        body = []
+        for j, held in calls:
+            indent = "        "
+            for lock in sorted(held):
+                body.append(f"{indent}with self.{lock}:")
+                indent += "    "
+            body.append(f"{indent}self.f{j}()")
+        body.append("        pass")
+        lines.extend(body)
+    return "\n".join(lines) + "\n"
+
+
+def _reference_entry(fns):
+    """Brute-force path enumeration.  entry(j) = declared(j) ∪ the
+    intersection, over every call path from an uncalled root to j, of
+    the locks acquired along that path (with-sites and requires-lock
+    declarations both count)."""
+    n = len(fns)
+    declared = [frozenset(d) for d, _ in fns]
+    callers = {j: [] for j in range(n)}
+    for i, (_, calls) in enumerate(fns):
+        for j, held in calls:
+            callers[j].append((i, frozenset(held)))
+
+    def paths_into(j):
+        """Held-sets carried into j, one per call path reaching j."""
+        if not callers[j]:
+            return [frozenset()]
+        out = []
+        for i, held in callers[j]:
+            for upstream in paths_into(i):
+                out.append(upstream | declared[i] | held)
+        return out
+
+    entry = {}
+    for j in range(n):
+        if not callers[j]:
+            entry[j] = declared[j]
+            continue
+        meet = None
+        for held in paths_into(j):
+            meet = held if meet is None else (meet & held)
+        entry[j] = declared[j] | meet
+    return entry
+
+
+def _check_program(fns):
+    src = _render_program(fns)
+    unit = SourceUnit.parse("repro/serve/gen.py", src)
+    flow = HeldLockDataflow(CallGraph.build([unit]))
+    want = _reference_entry(fns)
+    for j in range(len(fns)):
+        got = flow.entry_held(f"repro/serve/gen.py::S.f{j}")
+        assert got == want[j], (src, j, got, want[j])
+
+
+def test_dataflow_matches_reference_exhaustive_small():
+    """Deterministic floor under the property: every 2-function program
+    over one lock choice per slot, plus a diamond (two paths into f3
+    holding different locks — entry(f3) is the intersection)."""
+    import itertools
+    decls = [[], ["_a"]]
+    helds = [frozenset(), frozenset(["_a"]), frozenset(["_b"])]
+    for d0, d1, call, h in itertools.product(decls, decls, [0, 1], helds):
+        fns = [(d0, [(1, h)] if call else []), (d1, [])]
+        _check_program(fns)
+    diamond = [
+        ([], [(1, frozenset(["_a"])), (2, frozenset(["_b"]))]),
+        ([], [(3, frozenset())]),
+        (["_c"], [(3, frozenset())]),
+        ([], []),
+    ]
+    _check_program(diamond)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def dag_programs(draw):
+        """A random same-class DAG call program: function i may call
+        only functions j > i (so path enumeration terminates), each call
+        wrapped in a random with-lock chain, each function optionally
+        declaring a `# requires-lock:` contract."""
+        n = draw(st.integers(min_value=2, max_value=6))
+        fns = []
+        for i in range(n):
+            declared = draw(st.sets(st.sampled_from(LOCKS), max_size=1))
+            calls = []
+            for j in range(i + 1, n):
+                if draw(st.booleans()):
+                    calls.append((j, draw(st.sets(st.sampled_from(LOCKS),
+                                                  max_size=2))))
+            fns.append((sorted(declared), calls))
+        return fns
+
+    @settings(max_examples=120, deadline=None)
+    @given(dag_programs())
+    def test_dataflow_matches_reference_interpreter(fns):
+        _check_program(fns)
+
+
+# ---------------------------------------------------------------------------
+# lock-flow checker
+# ---------------------------------------------------------------------------
+
+def test_lock_flow_flags_unlocked_call_to_requires_lock_helper(tmp_path):
+    path = _serve_file(tmp_path, "svc.py", """
+        import threading
+
+        class S:
+            def __init__(self):
+                self._meta = threading.Lock()
+                self._log = []  # guarded-by: _meta
+
+            def commit(self):
+                # requires-lock: _meta
+                self._log.append(1)
+
+            def push(self):
+                self.commit()
+    """)
+    (f,) = _findings(path, "lock-flow")
+    assert "'push' calls 'commit'" in f.message
+    assert "_meta" in f.message
+
+
+def test_lock_flow_accepts_lexical_and_inherited_holders(tmp_path):
+    path = _serve_file(tmp_path, "svc.py", """
+        import threading
+
+        class S:
+            def __init__(self):
+                self._meta = threading.Lock()
+
+            def commit(self):
+                # requires-lock: _meta
+                pass
+
+            def push(self):
+                with self._meta:
+                    self.commit()
+
+            def outer(self):
+                # requires-lock: _meta
+                self.commit()
+    """)
+    assert _findings(path, "lock-flow") == []
+
+
+# ---------------------------------------------------------------------------
+# blocking-under-lock checker
+# ---------------------------------------------------------------------------
+
+def test_blocking_under_lock_flags_direct_fsync(tmp_path):
+    path = _serve_file(tmp_path, "store.py", """
+        import os
+        import threading
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def save(self, fd):
+                with self._lock:
+                    os.fsync(fd)
+    """)
+    (f,) = _findings(path, "blocking-under-lock")
+    assert "os.fsync" in f.message and "_lock" in f.message
+
+
+def test_blocking_under_lock_sees_through_helpers(tmp_path):
+    path = _serve_file(tmp_path, "svc.py", """
+        import threading
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.transport = None
+
+            def handle(self, msg):
+                with self._lock:
+                    self.notify(msg)
+
+            def notify(self, msg):
+                self.transport.send("peer", msg)
+    """)
+    (f,) = _findings(path, "blocking-under-lock")
+    assert "'notify'" in f.message and "transport.send" in f.message
+
+
+def test_blocking_under_lock_clean_when_hoisted(tmp_path):
+    path = _serve_file(tmp_path, "svc.py", """
+        import threading
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.transport = None
+                self.q = []
+
+            def handle(self, msg):
+                with self._lock:
+                    self.q.append(msg)
+                self.transport.send("peer", msg)
+    """)
+    assert _findings(path, "blocking-under-lock") == []
+
+
+def test_blocking_under_lock_exempts_coarse_locks(tmp_path):
+    path = _serve_file(tmp_path, "svc.py", """
+        import threading
+
+        class S:
+            def __init__(self):
+                self._mutate = threading.Lock()  # coarse-lock: broadcast by design
+                self.transport = None
+
+            def push(self, msg):
+                with self._mutate:
+                    self.transport.send("peer", msg)
+    """)
+    assert _findings(path, "blocking-under-lock") == []
+
+
+def test_blocking_under_lock_honors_allow_waiver(tmp_path):
+    path = _serve_file(tmp_path, "svc.py", """
+        import threading
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.cache = None
+
+            def rare_path(self, key, build):
+                with self._lock:
+                    return self.cache.get_or_build(key, build)  # analysis: allow(blocking-under-lock)
+    """)
+    # the finding comes from finalize() — the runner must still apply
+    # per-line waivers to it (regression for the finalize-waiver fix)
+    assert _findings(path, "blocking-under-lock") == []
+
+
+def test_blocking_under_lock_only_applies_to_serve(tmp_path):
+    path = _write(tmp_path, "repro/other/svc.py", """
+        import os
+        import threading
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def save(self, fd):
+                with self._lock:
+                    os.fsync(fd)
+    """)
+    assert _findings(path, "blocking-under-lock") == []
+
+
+# ---------------------------------------------------------------------------
+# term-fence checker
+# ---------------------------------------------------------------------------
+
+def test_term_fence_flags_unfenced_handler_mutation(tmp_path):
+    path = _serve_file(tmp_path, "replication.py", """
+        import threading
+
+        class Reg:
+            def __init__(self):
+                self._meta = threading.Lock()
+                self._log = {}  # guarded-by: _meta
+
+            def _handle_op(self, msg):
+                with self._meta:
+                    self._log[msg["name"]] = msg["op"]
+    """)
+    (f,) = _findings(path, "term-fence")
+    assert "_handle_op" in f.message and "self._log" in f.message
+
+
+def test_term_fence_accepts_fence_before_mutation(tmp_path):
+    path = _serve_file(tmp_path, "replication.py", """
+        import threading
+
+        class Reg:
+            def __init__(self):
+                self._meta = threading.Lock()
+                self.term = 0  # guarded-by: _meta
+                self._log = {}  # guarded-by: _meta
+
+            def _handle_op(self, msg):
+                with self._meta:
+                    if msg["term"] < self.term:
+                        return {"fenced": True}
+                    self._log[msg["name"]] = msg["op"]
+    """)
+    assert _findings(path, "term-fence") == []
+
+
+def test_term_fence_accepts_fence_via_helper_and_role_check(tmp_path):
+    path = _serve_file(tmp_path, "replication.py", """
+        import threading
+
+        class Reg:
+            def __init__(self):
+                self._meta = threading.Lock()
+                self.term = 0
+                self.role = "follower"
+                self._log = {}  # guarded-by: _meta
+
+            def _check_term(self, msg):
+                return msg.get("term", 0) < self.term
+
+            def _handle_op(self, msg):
+                if self._check_term(msg):
+                    return {"fenced": True}
+                self._log[msg["name"]] = msg["op"]
+
+            def _handle_client(self, msg):
+                if self.role != "leader":
+                    return {"forward": True}
+                self._log[msg["name"]] = msg["op"]
+    """)
+    assert _findings(path, "term-fence") == []
+
+
+def test_term_fence_flags_unfenced_mutation_via_helper(tmp_path):
+    path = _serve_file(tmp_path, "replication.py", """
+        import threading
+
+        class Reg:
+            def __init__(self):
+                self._meta = threading.Lock()
+                self._log = {}  # guarded-by: _meta
+
+            def _wipe(self, name):
+                with self._meta:
+                    self._log.pop(name, None)
+
+            def _handle_reset(self, msg):
+                self._wipe(msg["name"])
+    """)
+    findings = _findings(path, "term-fence")
+    assert any("_handle_reset" in f.message and "_wipe" in f.message
+               for f in findings)
+
+
+def test_term_fence_ignores_non_replication_files(tmp_path):
+    path = _serve_file(tmp_path, "engine.py", """
+        import threading
+
+        class Reg:
+            def __init__(self):
+                self._meta = threading.Lock()
+                self._log = {}  # guarded-by: _meta
+
+            def _handle_op(self, msg):
+                with self._meta:
+                    self._log[msg["name"]] = msg["op"]
+    """)
+    assert _findings(path, "term-fence") == []
+
+
+# ---------------------------------------------------------------------------
+# the real sources hold the proven properties
+# ---------------------------------------------------------------------------
+
+def test_repo_persist_term_entry_is_inferred_not_trusted():
+    """`_persist_term` has no requires-lock annotation; the engine must
+    INFER `_meta` because every caller holds it at the call site."""
+    src_dir = os.path.join(REPO, "src", "repro", "serve")
+    units = []
+    for name in os.listdir(src_dir):
+        if name.endswith(".py"):
+            path = os.path.join(src_dir, name)
+            with open(path, encoding="utf-8") as f:
+                units.append(SourceUnit.parse(
+                    path.replace(os.sep, "/"), f.read()))
+    flow = HeldLockDataflow(CallGraph.build(units))
+    entries = {q.rsplit("::", 1)[1]: held for q, held in flow.entry.items()
+               if q.endswith("::ReplicatedRegistry._persist_term")}
+    assert entries == {"ReplicatedRegistry._persist_term": {"_meta"}}
+
+
+def test_repo_sources_have_no_new_dataflow_findings():
+    result = scan([os.path.join(REPO, "src", "repro", "serve")])
+    new = [f for f in result.findings
+           if f.checker in ("lock-flow", "term-fence")]
+    assert new == [], new
+
+
+# ---------------------------------------------------------------------------
+# CLI: multiple roots + --diff
+# ---------------------------------------------------------------------------
+
+BAD_SERVE = """
+    import os
+    import threading
+
+    class S:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def save(self, fd):
+            with self._lock:
+                os.fsync(fd)
+"""
+
+
+def test_cli_accepts_multiple_roots(tmp_path):
+    _write(tmp_path, "rootA/repro/serve/a.py", BAD_SERVE)
+    _write(tmp_path, "rootB/repro/serve/b.py", BAD_SERVE)
+    proc = _run_cli("rootA", "rootB", "--format", "json",
+                    "--checkers", "blocking-under-lock",
+                    "--baseline", "missing.json", cwd=str(tmp_path))
+    payload = json.loads(proc.stdout)
+    assert proc.returncode == 1
+    assert payload["files_scanned"] == 2
+    paths = {f["path"] for f in payload["findings"]}
+    assert len(paths) == 2
+
+
+def _git(cwd, *args):
+    subprocess.run(
+        ["git", "-c", "user.email=t@t", "-c", "user.name=t", *args],
+        cwd=cwd, check=True, capture_output=True, text=True)
+
+
+def test_cli_diff_scans_only_changed_files(tmp_path):
+    _write(tmp_path, "src/repro/serve/clean.py", "X = 1\n")
+    _write(tmp_path, "src/repro/serve/bad.py", "Y = 1\n")
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "add", ".")
+    _git(tmp_path, "commit", "-qm", "base")
+    # one tracked file gains a violation; the clean file is untouched
+    _write(tmp_path, "src/repro/serve/bad.py", BAD_SERVE)
+    proc = _run_cli("src", "--diff", "HEAD", "--format", "json",
+                    "--checkers", "blocking-under-lock",
+                    "--baseline", "missing.json", cwd=str(tmp_path))
+    payload = json.loads(proc.stdout)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert payload["files_scanned"] == 1
+    assert payload["findings"][0]["path"] == "src/repro/serve/bad.py"
+
+
+def test_cli_diff_no_changes_is_clean_exit(tmp_path):
+    _write(tmp_path, "src/repro/serve/clean.py", "X = 1\n")
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "add", ".")
+    _git(tmp_path, "commit", "-qm", "base")
+    proc = _run_cli("src", "--diff", "HEAD", cwd=str(tmp_path))
+    assert proc.returncode == 0
+    assert "nothing to scan" in proc.stdout
+
+
+def test_cli_diff_bad_rev_is_usage_error(tmp_path):
+    _write(tmp_path, "src/x.py", "X = 1\n")
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "add", ".")
+    _git(tmp_path, "commit", "-qm", "base")
+    proc = _run_cli("src", "--diff", "no-such-rev", cwd=str(tmp_path))
+    assert proc.returncode == 2
+    assert "git diff" in proc.stderr

@@ -107,6 +107,40 @@ class TestOpLog:
         assert set(partial["payloads"]) == {state_hash(s1)}   # s0 skipped
 
 
+class TestBundleTermFence:
+    def test_stale_term_bundle_cannot_phantom_drop(self):
+        """Term-fence regression for `_ingest_bundle`: `_apply` fences
+        per-op, but a reset with NO ops (the phantom-drop path) never
+        reaches `_apply` — a deposed leader's stale pull reply could
+        silently drop a name the new leader has committed.  The bundle
+        must be fenced up front on its term."""
+        fleet = FleetHarness(n_hosts=1)
+        model, (s0,) = _states(1)
+        fleet.register("m", model, s0)
+        reg = fleet.leader
+        reg.observe_term(5)                     # fleet has moved on
+        stale = {"ops": {}, "payloads": {}, "reset": ["m"], "term": 3}
+        with pytest.raises(ReplicationError, match="rejected"):
+            reg._ingest_bundle(stale)
+        assert "m" in reg.local.names()         # committed name survives
+        # a current-term reset-only bundle still drops the phantom — the
+        # fence rejects stale SENDERS, not the drop mechanism itself
+        fresh = {"ops": {}, "payloads": {}, "reset": ["m"], "term": 5}
+        assert reg._ingest_bundle(fresh) == 0
+        assert "m" not in reg.local.names()
+
+    def test_termless_bundle_is_not_fenced(self):
+        """Bundles without a term (static fleets never fence) bypass the
+        gate — the pre-election replication protocol keeps working."""
+        fleet = FleetHarness(n_hosts=1)
+        model, (s0,) = _states(1)
+        fleet.register("m", model, s0)
+        reg = fleet.leader
+        reg.observe_term(5)
+        reg._ingest_bundle({"ops": {}, "payloads": {}, "reset": ["m"]})
+        assert "m" not in reg.local.names()
+
+
 class TestFleetReplication:
     def test_register_replicates_everywhere(self):
         fleet = FleetHarness(n_hosts=3)

@@ -331,6 +331,37 @@ class TestTrainWhileServe:
         with pytest.raises(RuntimeError, match="nothing staged"):
             svc.promote("m")
 
+    def test_fused_compile_happens_outside_tws_lock(self):
+        """Blocking-under-lock regression: the fused transform+update
+        program must be fetched/compiled BEFORE the per-name
+        train-while-serve lock is taken — a cold compile under the lock
+        convoys every concurrent update/promote for the name.  The spy
+        records whether the name's lock is held at every compile-cache
+        entry (owner-agnostic: this thread IS the one that would hold
+        it)."""
+        model = _model(block=4)
+        svc, st = _service(model)
+        held_at_build = []
+        real = svc.cache.get_or_build
+
+        def spy(key, build):
+            lock = svc._tws_locks.get("m")
+            held_at_build.append(lock.locked() if lock is not None else False)
+            return real(key, build)
+
+        svc.cache.get_or_build = spy
+        x = jax.random.normal(jax.random.PRNGKey(7), (12, 4, 32))
+        for blk in x:          # first block creates the lock; later
+            y = svc.serve_and_update("m", blk)   # blocks must still
+            np.testing.assert_allclose(          # pre-build outside it
+                np.asarray(y), np.asarray(model.transform(st, blk)),
+                rtol=1e-6, atol=1e-7)
+        # wider batch after the lock exists: a genuinely fresh compile
+        wide = jax.random.normal(jax.random.PRNGKey(8), (8, 32))
+        svc.serve_and_update("m", wide)
+        assert held_at_build and not any(held_at_build)
+        assert svc.metrics()["updates_applied"]["m"] == 13
+
     @pytest.mark.slow
     def test_threaded_stream_vs_promote_loses_no_update(self):
         """Satellite bugfix regression: one thread streams blocks through
