@@ -59,10 +59,20 @@ restarts from disk: `restore_ms` is the full bootstrap (WAL scan + torn
 tail truncate + snapshot load + op replay) and `snapshot_bytes` the
 compacted on-disk footprint.
 
+Three fleet-merge rows (`fleet_merge_{1,8,32}x`) run a 3-host fleet with
+a `FleetMerger` per host: every host streams a disjoint shard through
+`serve_and_update`, then the leader drives one compressed delta-merge
+round end to end.  `merge_wall_ms` is the warm round (collect + sketch
+all-reduce + projection decode + quorum promote + commit) and
+`wire_bytes` what actually crossed the bus — both CEILING-gated, so a
+compression regression (sketches silently riding the raw path) or a
+merge-path slowdown fails CI's fleet-merge job.
+
 `--json out.json` additionally writes the rows machine-readably (the
 `derived` k=v pairs parsed into fields); CI uploads that artifact and
 gates `flip_ms` / `p99_us` / `failover_ms` / `restore_ms` /
-`snapshot_bytes` against `benchmarks/baseline.json` at a generous 2x via
+`snapshot_bytes` / `merge_wall_ms` / `wire_bytes` against
+`benchmarks/baseline.json` at a generous 2x via
 `benchmarks/check_regression.py`.
 
 Run: PYTHONPATH=src python benchmarks/serve_latency.py [--smoke] [--full]
@@ -84,11 +94,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.execution import Execution
+from repro.dist.compress import CompressConfig, collective_bytes_saved
 from repro.dr import DRModel, EASIStage, RPStage
 from repro.launch import roofline
 from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, Elector,
-                         LocalBus, ReplicatedRegistry, ReplicationError,
-                         state_hash)
+                         FleetMerger, LocalBus, ReplicatedRegistry,
+                         ReplicationError, state_hash)
 from repro.serve.batching import EXACT
 
 
@@ -327,6 +338,54 @@ def run(fast: bool = True, backend: str = "xla"):
                      f"versions={n_states};restored_version={restored_v}"))
     finally:
         shutil.rmtree(data_dir, ignore_errors=True)
+
+    # fleet merge: 3 hosts stream DISJOINT shards through serve_and_update,
+    # then the leader runs one compressed delta-merge round per ratio
+    # (collect -> sketch all-reduce -> projection decode -> quorum promote
+    # -> commit).  `merge_wall_ms` is the full round on a warm fleet;
+    # `wire_bytes` is what actually crossed the bus (round report) and
+    # `sketch_ratio` the accounting from `collective_bytes_saved` — the
+    # wall time and wire bytes are gated 2x per ratio in baseline.json.
+    bs = model.block_size
+    n_blocks = 6 if fast else 24
+    for ratio in (1, 8, 32):
+        cfg = CompressConfig(ratio=ratio, min_size=64)
+        bus = LocalBus()
+        leader = ReplicatedRegistry(bus.attach("h0"), role="leader")
+        regs = [leader] + [ReplicatedRegistry(bus.attach(f"h{i}"),
+                                              role="follower", leader="h0")
+                           for i in (1, 2)]
+        svcs = [DRService(registry=r,
+                          buckets=BucketPolicy(min_bucket=4, max_bucket=64))
+                for r in regs]
+        mergers = [FleetMerger(s, compress_cfg=cfg) for s in svcs]
+        leader.register("dr", model, state)
+        rng = np.random.RandomState(11 + ratio)
+
+        def _feed():
+            for si, s in enumerate(svcs):
+                for _ in range(n_blocks):
+                    blk = jnp.asarray(
+                        rng.randn(bs, model.in_dim).astype(np.float32)
+                        + 0.25 * si)
+                    jax.block_until_ready(s.serve_and_update("dr", blk))
+
+        _feed()
+        mergers[0].merge_round("dr")    # warmup: pay the sketch-path jits
+        _feed()
+        rep = mergers[0].merge_round("dr")
+        assert rep["version"] is not None and len(rep["contributors"]) == 3, rep
+        acct = collective_bytes_saved(state, cfg)
+        rows.append((f"serve_latency/fleet_merge_{ratio}x",
+                     rep["wall_ms"] * 1e3,
+                     f"hosts=3;ratio={ratio};"
+                     f"merge_wall_ms={rep['wall_ms']:.2f};"
+                     f"wire_bytes={rep['bytes_sketched']};"
+                     f"uncompressed_bytes={rep['bytes_uncompressed']};"
+                     f"sketch_ratio={acct['ratio']:.2f};"
+                     f"contributors={len(rep['contributors'])};"
+                     f"updates_folded={rep['updates_folded']};"
+                     f"version={rep['version']}"))
     return rows
 
 

@@ -18,10 +18,11 @@ the sketch only pays off on large dense tensors.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -105,6 +106,199 @@ def compress_sync(grads: PyTree, ef: PyTree, cfg: CompressConfig,
 
     return (jax.tree_util.tree_unflatten(treedef, out_g),
             jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+# ---------------------------------------------------------------------------
+# staged-delta sketches for fleet merge rounds (repro.serve.fleet_merge)
+# ---------------------------------------------------------------------------
+#
+# `compress_sync` is the shard_map/pmean form: every shard is inside one
+# collective and the sketch is averaged in flight.  A serving fleet has no
+# collective — hosts ship their staged-state deltas to the leader over the
+# replication transport.  Same sketch, different decode:
+#
+#   host i:   y_i = (d_i + e_i) Rᵀ         sketch + error-feedback carry-in
+#             e_i' = (d_i + e_i) − P(d_i + e_i)   residual stays LOCAL
+#   leader:   Σ d̂ = P-decode(Σ y_i)        one least-squares decode; R is
+#                                          shared per (seed, salt, leaf) so
+#                                          sketches sum coherently
+#
+# where P = Rᵀ(RRᵀ)⁻¹R is the orthogonal projection onto rowspace(R).  The
+# decode here is deliberately NOT the unbiased (s/p)·yR back-projection
+# `compress_sync` uses: under error feedback the residual is re-compressed
+# every round, and the unbiased decode has variance ≈ ratio·‖v‖², so
+# iterating v ↦ v − v RᵀR on a carried residual DIVERGES geometrically.
+# The projection decode satisfies ‖v − P v‖ ≤ ‖v‖ deterministically, and
+# with a fresh R per round (the `salt` argument — all parties of a round
+# must agree on it) each round removes the component of the residual in a
+# new random p-dim subspace: E‖e'‖² = (1 − 1/ratio)·‖e‖², a geometric
+# contraction, so K merge rounds converge to the uncompressed merge.
+# `compress_sync` keeps the unbiased form — there the estimate feeds an
+# SGD step where bias, not variance, is the enemy.
+#
+# Deltas from disjoint traffic shards SUM (they are independent first-order
+# contributions vs the same promoted base), so the leader adds sketches
+# rather than averaging them.  Small leaves, integer leaves (e.g. the int8
+# ternary RP stage, the int32 step counter), and `ratio == 1` ride the raw
+# path — bit-exact, no residual.  An all-zero contribution (a static stage
+# whose delta never moves) ships a "zero" marker instead of its bytes.
+
+def _merge_key(cfg: CompressConfig, salt: int, leaf: int) -> jax.Array:
+    """R's key for merge-round sketches: (seed, salt, leaf index).  The
+    salt varies per round so repeated rounds project residuals onto fresh
+    subspaces (see the module comment above — a fixed R cannot contract)."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(cfg.seed), salt & 0x7FFFFFFF),
+        leaf)
+
+
+def _ls_decode(y: jax.Array, r: jax.Array) -> jax.Array:
+    """Least-squares decode of sketch rows: y (RRᵀ)⁻¹ R — the orthogonal
+    projection of the sketched chunks onto rowspace(R).  ‖v − Pv‖ ≤ ‖v‖
+    always, which is what makes per-round error feedback a contraction."""
+    g = r @ r.T
+    # ternary R rows have ≈ c/ratio nonzeros; the tiny ridge only matters
+    # when a row draws all-zero (possible at small p), keeping G invertible
+    g = g + 1e-6 * jnp.eye(g.shape[0], dtype=g.dtype)
+    return y @ jnp.linalg.solve(g, r)
+
+
+def residual_init(state_like: PyTree) -> PyTree:
+    """A zero error-feedback tree mirroring `state_like` — one per host
+    per model name, threaded through `delta_sketch` calls and persisted
+    via the replication WAL between merge rounds."""
+    return jax.tree.map(jnp.zeros_like, state_like)
+
+
+def residual_nonzero(ef: PyTree) -> bool:
+    """Does this error-feedback tree carry any signal worth flushing?"""
+    return any(bool(np.any(np.asarray(leaf)))
+               for leaf in jax.tree.leaves(ef))
+
+
+def delta_sketch(delta: PyTree, ef: PyTree, cfg: CompressConfig,
+                 salt: int = 0) -> Tuple[Dict[str, Any], PyTree]:
+    """Compress one host's staged-state delta for a fleet merge round.
+
+    Returns `(bundle, new_ef)`.  The bundle is a picklable dict of
+    per-leaf entries in tree order — `("zero", None)` for an all-zero
+    contribution, `("raw", ndarray)` for exact small/integer/ratio-1
+    leaves (their residual flushes to zero), `("sketch", ndarray)` for
+    ternary-RP sketched leaves (residual = what the projection decode of
+    the host's own sketch missed, carried into the next round).  `salt`
+    keys this round's R draw and must match the `merge_deltas` call that
+    decodes the bundle — the merge leader picks it per round.
+    """
+    flat_d, _ = jax.tree_util.tree_flatten_with_path(delta)
+    flat_e, etreedef = jax.tree_util.tree_flatten(ef)
+    if len(flat_e) != len(flat_d):
+        raise ValueError("error-feedback tree must mirror the delta tree")
+    entries: List[Tuple[str, Any]] = []
+    out_e = []
+    for i, ((kp, d), e) in enumerate(zip(flat_d, flat_e)):
+        exact = (cfg.ratio == 1 or d.size < max(1, cfg.min_size)
+                 or not jnp.issubdtype(jnp.asarray(d).dtype, jnp.floating))
+        if exact:
+            v = np.asarray(jax.device_get(d + e))
+            out_e.append(jnp.zeros_like(e))
+            if not np.any(v):
+                entries.append(("zero", None))
+            else:
+                entries.append(("raw", v))
+            continue
+        v = (d + e).astype(jnp.float32)
+        if not np.any(np.asarray(jax.device_get(v))):
+            entries.append(("zero", None))
+            out_e.append(jnp.zeros_like(e))
+            continue
+        c, n_chunks, p = _chunk_dims(d.size, cfg)
+        flat = v.reshape(-1)
+        pad = n_chunks * c - flat.size
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        chunks = flat.reshape(n_chunks, c)
+        # the SAME (seed, salt, leaf index) keying on every host and the
+        # leader: all parties of a round regenerate an identical R, so
+        # sketches from different hosts add coherently and decode with
+        # one projection
+        r = _rp_matrix(_merge_key(cfg, salt, i), p, c, p)
+        y = chunks @ r.T                         # (n_chunks, p)
+        est = _ls_decode(y, r).reshape(-1)
+        if pad:
+            est = est[: d.size]
+        est = est.reshape(d.shape)
+        entries.append(("sketch", np.asarray(jax.device_get(y))))
+        out_e.append((v.reshape(d.shape) - est).astype(e.dtype))
+    return ({"leaves": entries, "salt": int(salt)},
+            jax.tree_util.tree_unflatten(etreedef, out_e))
+
+
+def merge_deltas(base: PyTree, bundles: Sequence[Dict[str, Any]],
+                 cfg: CompressConfig, salt: int = 0) -> PyTree:
+    """Leader-side all-reduce: decode and SUM per-host delta bundles into
+    one delta pytree shaped (and typed) like `base`.  Sketched leaves sum
+    in sketch space first — one projection decode total, and numerically
+    identical to decoding each then adding (the decode is linear).  Every
+    bundle must have been sketched with this round's `salt`."""
+    flat_b, treedef = jax.tree_util.tree_flatten_with_path(base)
+    for bundle in bundles:
+        if len(bundle["leaves"]) != len(flat_b):
+            raise ValueError(
+                f"delta bundle has {len(bundle['leaves'])} leaves; the base "
+                f"state has {len(flat_b)} — mismatched model structure")
+        if int(bundle.get("salt", salt)) != int(salt):
+            raise ValueError(
+                f"delta bundle sketched with salt {bundle['salt']}, round "
+                f"decodes with salt {salt} — mixed rounds cannot merge")
+    out = []
+    for i, (kp, b) in enumerate(flat_b):
+        raw_sum = None
+        y_sum = None
+        for bundle in bundles:
+            kind, arr = bundle["leaves"][i]
+            if kind == "zero":
+                continue
+            if kind == "raw":
+                raw_sum = arr if raw_sum is None else raw_sum + arr
+            elif kind == "sketch":
+                y_sum = arr if y_sum is None else y_sum + arr
+            else:
+                raise ValueError(f"unknown bundle entry kind {kind!r}")
+        merged = jnp.zeros(b.shape, jnp.result_type(b.dtype, jnp.float32)
+                           if jnp.issubdtype(jnp.asarray(b).dtype,
+                                             jnp.floating) else b.dtype)
+        if raw_sum is not None:
+            merged = merged + raw_sum.reshape(b.shape)
+        if y_sum is not None:
+            c, n_chunks, p = _chunk_dims(b.size, cfg)
+            r = _rp_matrix(_merge_key(cfg, salt, i), p, c, p)
+            est = _ls_decode(jnp.asarray(y_sum), r).reshape(-1)[: b.size]
+            merged = merged + est.reshape(b.shape)
+        out.append(merged.astype(jnp.asarray(b).dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def apply_delta(base: PyTree, delta: PyTree) -> PyTree:
+    """`base + delta`, leaf-wise, preserving base leaf dtypes — how a
+    merged delta becomes the next promoted state."""
+    return jax.tree.map(
+        lambda b, d: (b + d).astype(jnp.asarray(b).dtype), base, delta)
+
+
+def bundle_bytes(bundle: Dict[str, Any]) -> int:
+    """Actual bytes-on-the-wire of one host's delta bundle (zero markers
+    are free; raw and sketch entries cost their array bytes)."""
+    total = 0
+    for kind, arr in bundle["leaves"]:
+        if arr is not None:
+            total += int(np.asarray(arr).nbytes)
+    return total
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Uncompressed byte size of a pytree's leaves (the 1x wire cost)."""
+    return int(sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree.leaves(tree)))
 
 
 def collective_bytes_saved(grads: PyTree, cfg: CompressConfig) -> Dict[str, float]:

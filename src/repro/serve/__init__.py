@@ -18,8 +18,8 @@ for one-shot callers.
 """
 
 from repro.serve import (batching, clock, dr_serve, durability, election,
-                         engine, registry, replication, scheduler,
-                         serve_step, slo, transport)
+                         engine, fleet_merge, registry, replication,
+                         scheduler, serve_step, slo, transport)
 from repro.serve.durability import (BlobStore, CorruptBlobError,
                                     DurableStore, WriteAheadLog)
 from repro.serve.batching import (BoundedCompileCache, BucketPolicy,
@@ -28,6 +28,7 @@ from repro.serve.clock import Clock, MonotonicClock, VirtualClock
 from repro.serve.dr_serve import dr_transform, make_dr_transform
 from repro.serve.election import Elector
 from repro.serve.engine import DRService
+from repro.serve.fleet_merge import FleetMerger, MergeError
 from repro.serve.registry import ModelRegistry
 from repro.serve.replication import (Op, ReplicatedRegistry, ReplicationError,
                                      state_hash)
@@ -39,8 +40,8 @@ from repro.serve.transport import (LocalBus, TCPTransport, Transport,
 __all__ = [
     "engine", "registry", "batching", "serve_step", "dr_serve",
     "scheduler", "clock", "slo", "replication", "transport", "election",
-    "durability",
-    "Elector",
+    "durability", "fleet_merge",
+    "Elector", "FleetMerger", "MergeError",
     "DurableStore", "WriteAheadLog", "BlobStore", "CorruptBlobError",
     "DRService", "ModelRegistry", "DeadlineScheduler", "SchedulerClosed",
     "BucketPolicy", "BoundedCompileCache", "MicroBatcher", "QueueFull",

@@ -302,10 +302,14 @@ class BlobStore:
 @dataclasses.dataclass
 class RecoveredState:
     """What `DurableStore.recover()` hands the registry: per-name ordered
-    op lists (payloads live in the blob store) and election metadata."""
+    op lists (payloads live in the blob store), election metadata, and
+    the per-name fleet-merge error-feedback residuals (last write wins —
+    a residual record fully supersedes the previous one for its name)."""
     ops: Dict[str, List[Any]]
     term: int
     voted: Dict[int, str]                           # term -> candidate
+    residuals: Dict[str, Any] = dataclasses.field(  # name -> ef pytree
+        default_factory=dict)
 
 
 class DurableStore:
@@ -316,6 +320,10 @@ class DurableStore:
         ("reset", name)       — anti-entropy rewound this name's log
         ("term", t)           — the election term advanced to t
         ("vote", (t, host))   — this host granted its term-t vote to host
+        ("residual", (name, ef)) — this host's fleet-merge error-feedback
+                              tree after a collect, fsync'd BEFORE the
+                              sketch is acked to the leader (a crash
+                              between WAL and ack re-folds idempotently)
 
     `compact(dump)` folds everything into `snapshots/snap_<k>/`:
         state.pkl         — pickled {"ops": .., "term": .., "voted": ..}
@@ -364,6 +372,13 @@ class DurableStore:
     def log_vote(self, term: int, candidate: str) -> None:
         self._log("vote", (int(term), candidate))
 
+    def log_residual(self, name: str, ef: PyTree) -> None:
+        """Persist a fleet-merge error-feedback tree (host leaves — call
+        `host_state` first).  Residuals ride the WAL inline rather than
+        the blob store: they are per-name last-write-wins, so compaction
+        keeps only the newest and blob GC never has to reason about them."""
+        self._log("residual", (name, ef))
+
     def should_compact(self) -> bool:
         return self._appends >= self.compact_every
 
@@ -375,6 +390,8 @@ class DurableStore:
             {n: list(lst) for n, lst in snap["ops"].items()}
         term = 0 if snap is None else int(snap["term"])
         voted: Dict[int, str] = {} if snap is None else dict(snap["voted"])
+        residuals: Dict[str, Any] = {} if snap is None else \
+            dict(snap.get("residuals", {}))
         dead: set = set()               # names with a seq gap: unrecoverable
         for kind, payload in self.wal.records:
             if kind == "op":
@@ -399,10 +416,15 @@ class DurableStore:
                 voted[int(t)] = cand
                 term = max(term, int(t))
                 continue
+            elif kind == "residual":
+                rname, ef = payload
+                residuals[rname] = ef   # last write wins per name
+                continue
             else:
                 continue                # unknown kind: forward-compat skip
             ops.setdefault(payload.name, []).append(payload)
-        return RecoveredState(ops=ops, term=term, voted=voted)
+        return RecoveredState(ops=ops, term=term, voted=voted,
+                              residuals=residuals)
 
     # ---- snapshots / compaction -------------------------------------------
     def _snap_ids(self) -> List[int]:
@@ -446,12 +468,14 @@ class DurableStore:
 
     def compact(self, dump: Dict[str, Any]) -> None:
         """Fold `dump` ({"ops": per-name op lists, "term": int,
-        "voted": {term: host}}) into a fresh snapshot, truncate the WAL,
-        GC unreferenced blobs and stale snapshots."""
+        "voted": {term: host}, "residuals": {name: ef}}) into a fresh
+        snapshot, truncate the WAL, GC unreferenced blobs and stale
+        snapshots."""
         sid = (self._snap_ids()[-1] + 1) if self._snap_ids() else 0
         blob = pickle.dumps(
             {"ops": dump["ops"], "term": int(dump["term"]),
-             "voted": dict(dump["voted"])},
+             "voted": dict(dump["voted"]),
+             "residuals": dict(dump.get("residuals", {}))},
             protocol=pickle.HIGHEST_PROTOCOL)
         live = {op.state_hash for lst in dump["ops"].values() for op in lst
                 if op.state_hash is not None}

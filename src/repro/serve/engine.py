@@ -90,6 +90,25 @@ class _StepWork:
     args: Tuple[Any, ...]
 
 
+@dataclasses.dataclass(frozen=True)
+class StagedExtraction:
+    """What a fleet-merge collect pulls out of the engine under the
+    per-name train-while-serve lock: the staged chain (None when nothing
+    is staged), the state the chain was folded FROM (`staged − chain_base`
+    is this host's delta — measured against the chain's own base, so the
+    delta stays exactly this host's folds even if the live pointer moved
+    under the chain), the registry op seq at extraction time (what the
+    merger's carry record and the merge-op log are compared against), and
+    how many updates the chain folds.  Extraction CONSUMES the chain:
+    from here on the delta lives in the merger's durable carry, and a
+    late `serve_and_update` starts a fresh chain from the current live
+    state — so delta ownership is never split between engine and merger."""
+    staged: Optional[PyTree]
+    chain_base: Optional[PyTree]
+    seq: int
+    updates: int
+
+
 class DRService:
     """Online serving engine: registry + micro-batching + train-while-serve."""
 
@@ -141,6 +160,13 @@ class DRService:
         # with the SAME chain re-promotes that version instead of pushing a
         # duplicate (a replicated push re-ships the full state to the fleet)
         self._staged_pushed: Dict[str, Tuple[PyTree, int]] = {}  # guarded-by: _tws_guard
+        # fleet-merge bookkeeping: the state each staged chain was folded
+        # FROM (set when the chain starts, so a merge round can extract
+        # `staged − chain_base` as this host's delta) and how many updates
+        # the CURRENT chain folds (`_updates` is the cumulative metrics
+        # counter; this one resets per chain and rides the extraction).
+        self._staged_from: Dict[str, PyTree] = {}   # guarded-by: _tws_guard
+        self._chain_updates: Dict[str, int] = {}    # guarded-by: _tws_guard
         self._tws_guard = threading.Lock()          # guards the lock table
         self._tws_locks: Dict[str, threading.Lock] = {}  # guarded-by: _tws_guard
         # serving metrics — counters are bumped from caller threads AND a
@@ -191,6 +217,8 @@ class DRService:
                 with self._tws_guard:
                     staged = self._staged.pop(name, None)
                     pushed = self._staged_pushed.pop(name, None)
+                    chain_base = self._staged_from.pop(name, None)
+                    chain_updates = self._chain_updates.pop(name, None)
                 if staged is None:
                     raise RuntimeError(
                         f"nothing staged for {name!r}; run serve_and_update "
@@ -207,9 +235,13 @@ class DRService:
                 except Exception:
                     with self._tws_guard:
                         self._staged[name] = staged
+                        if chain_base is not None:
+                            self._staged_from[name] = chain_base
+                        if chain_updates is not None:
+                            self._chain_updates[name] = chain_updates
                     raise
                 try:
-                    return self.registry.promote(name, version)
+                    result = self.registry.promote(name, version)
                 except Exception:
                     # promote can fail after the pop+push (e.g. a replicated
                     # registry aborting on lost quorum) — restore the staged
@@ -220,7 +252,12 @@ class DRService:
                     with self._tws_guard:
                         self._staged[name] = staged
                         self._staged_pushed[name] = (staged, version)
+                        if chain_base is not None:
+                            self._staged_from[name] = chain_base
+                        if chain_updates is not None:
+                            self._chain_updates[name] = chain_updates
                     raise
+                return result
             return self.registry.promote(name, version)
 
     def _pushed_still_valid(self, name: str, version: int,
@@ -255,6 +292,25 @@ class DRService:
     def staged_state(self, name: str) -> Optional[PyTree]:
         with self._tws_guard:
             return self._staged.get(name)
+
+    # ---- fleet-merge hooks (repro.serve.fleet_merge) -----------------------
+    def extract_staged(self, name: str) -> StagedExtraction:
+        """Consume the staged chain for a merge round.  Under the
+        per-name train-while-serve lock: pop the chain and its base — the
+        delta is now the merger's to account for (its durable carry
+        record), and the next `serve_and_update` starts a fresh chain
+        from whatever state is live by then.  The delta math itself
+        happens in the caller, outside every lock."""
+        with self._tws_lock(name):
+            applied = getattr(self.registry, "applied_seq", None)
+            seq = applied(name) if applied is not None else -1
+            with self._tws_guard:
+                staged = self._staged.pop(name, None)
+                base = self._staged_from.pop(name, None)
+                updates = self._chain_updates.pop(name, 0)
+                self._staged_pushed.pop(name, None)
+            return StagedExtraction(staged=staged, chain_base=base,
+                                    seq=seq, updates=updates)
 
     # ---- one-shot serving --------------------------------------------------
     def transform(self, name: str, x: jax.Array) -> jax.Array:
@@ -473,11 +529,19 @@ class DRService:
                 self._check_request(snap, x)
                 fused = self._fused_update_fn(snap, x)  # analysis: allow(blocking-under-lock)
             with self._tws_guard:
-                staged = self._staged.get(name, snap.state)
+                staged = self._staged.get(name)
+                if staged is None:
+                    # a fresh chain starts here: remember the base it is
+                    # folded from, so a merge round can extract the delta
+                    staged = snap.state
+                    self._staged_from[name] = snap.state
+                    self._chain_updates[name] = 0
             y, new_staged = fused(snap.state, staged, x)
             with self._tws_guard:
                 self._staged[name] = new_staged
                 self._updates[name] = self._updates.get(name, 0) + 1
+                self._chain_updates[name] = \
+                    self._chain_updates.get(name, 0) + 1
         with self._metrics_lock:
             self.served_rows += int(x.shape[0])
             self.batches_run += 1

@@ -92,7 +92,7 @@ class Op:
     """
 
     seq: int
-    kind: str                           # register | push | promote | rollback
+    kind: str                   # register | push | promote | rollback | merge
     name: str
     version: Optional[int] = None
     state_hash: Optional[str] = None
@@ -100,6 +100,11 @@ class Op:
     ensemble: Optional[int] = None
     replace: bool = False
     model: Any = None
+    # "merge" ops only: the host ids whose staged deltas this version
+    # folds in.  A host that missed the merge-commit message consults the
+    # op log for a merge op naming it — the durable, anti-entropy-healed
+    # signal that its extracted delta actually landed.
+    contributors: Tuple[str, ...] = ()
     # the election term of the leader that created this op (0 in static
     # fleets).  Two logs that agree on (seq, term) prefixes agree on
     # content — how anti-entropy detects a deposed leader's uncommitted
@@ -156,6 +161,10 @@ class ReplicatedRegistry:
         # on dynamic roles + forwarding of mutations to the current leader.
         self.term = 0  # guarded-by: _meta
         self.elector: Optional[Any] = None
+        # `merger` is attached by `repro.serve.fleet_merge.FleetMerger`:
+        # merge_collect / merge_commit messages dispatch to it (term-fenced
+        # by `_check_term` like every other leader-originated RPC).
+        self.merger: Optional[Any] = None
         # `_mutate` serializes whole leader mutations (append + broadcast +
         # quorum wait).  `_meta` guards the log/state-store/applied maps and
         # is never held across transport I/O, so pull/status handlers from
@@ -173,6 +182,10 @@ class ReplicatedRegistry:
         # recovery replay runs ops through the normal `_apply` path.
         self.durable: Optional[DurableStore] = None
         self._voted: Dict[int, str] = {}  # guarded-by: _meta
+        # newest fleet-merge error-feedback tree per name (host leaves),
+        # mirrored here so compaction snapshots carry it and a restarted
+        # merger can seed from `recovered_residuals()`
+        self._residuals: Dict[str, PyTree] = {}  # guarded-by: _meta
         self._recovering = False  # guarded-by: _meta
         if data_dir is not None:
             self.durable = DurableStore(data_dir, fsync=fsync,
@@ -207,6 +220,12 @@ class ReplicatedRegistry:
         dispatch to it, and mutations on a non-leader host forward to the
         current leader instead of raising (the static-fleet contract)."""
         self.elector = elector
+
+    def attach_merger(self, merger: Any) -> None:
+        """Wire a `repro.serve.fleet_merge.FleetMerger` in: merge_collect /
+        merge_commit messages dispatch to it.  Like `attach_elector`, the
+        merger is per-host — every host in a merging fleet attaches one."""
+        self.merger = merger
 
     def leader_status(self) -> Dict[str, Any]:
         """Who this host believes leads the fleet, and at what term."""
@@ -292,6 +311,7 @@ class ReplicatedRegistry:
         # discipline unconditional instead of "except during bootstrap".
         with self._meta:
             self._voted = dict(rec.voted)
+            self._residuals = dict(rec.residuals)
             self.term = max(self.term, rec.term)
             self._recovering = True
         try:
@@ -335,6 +355,29 @@ class ReplicatedRegistry:
         with self._meta:
             return dict(self._voted)
 
+    def persist_residual(self, name: str, ef: PyTree) -> None:
+        """Record this host's fleet-merge carry record for `name` —
+        fsync'd BEFORE the sketch is acked to the merge leader, so a host
+        that crashes between the WAL append and the ack restarts with the
+        exact record it committed to, and the merger resolves its pending
+        flag against the merge-op log (`merge_landed`) on the next
+        collect (re-resolving is idempotent: last write wins per name).
+        The WAL append happens OUTSIDE `_meta` on purpose: residuals have
+        no ordering constraint against the op log, and durable I/O under
+        a non-coarse lock is exactly what `blocking-under-lock` flags."""
+        st = host_state(ef)
+        with self._meta:
+            self._residuals[name] = st
+            recovering = self._recovering
+        if self.durable is not None and not recovering:
+            self.durable.log_residual(name, st)
+
+    def recovered_residuals(self) -> Dict[str, PyTree]:
+        """Per-name error-feedback trees as persisted (empty when not
+        durable or never merged) — the merger seeds from this on attach."""
+        with self._meta:
+            return dict(self._residuals)
+
     def compact(self) -> None:
         """Fold the WAL into a fresh snapshot now (also triggered
         automatically every `compact_every` WAL appends).  No-op without
@@ -347,7 +390,8 @@ class ReplicatedRegistry:
     def _durable_dump(self) -> Dict[str, Any]:
         """Everything a snapshot must hold (caller holds `_meta`)."""
         return {"ops": {n: list(log) for n, log in self._log.items()},
-                "term": self.term, "voted": dict(self._voted)}
+                "term": self.term, "voted": dict(self._voted),
+                "residuals": dict(self._residuals)}
 
     def durability_stats(self) -> Optional[Dict[str, Any]]:
         return None if self.durable is None else self.durable.stats()
@@ -419,6 +463,71 @@ class ReplicatedRegistry:
                 self._commit_meta(op, st)
             self._broadcast(op, {h: st})
             return version
+
+    def push_merged(self, name: str, state: PyTree, *,
+                    contributors: Tuple[str, ...] = ()) -> int:
+        """Append a fleet-merge result as a new state version (op kind
+        "merge": applied exactly like a push, but the log durably records
+        WHICH hosts' staged deltas the version folds in — a contributor
+        that missed the merge-commit message finds itself named here and
+        reconciles from the op log instead of double-counting its delta)."""
+        if self.role != "leader":
+            return self._forward("push_merged", name=name,
+                                 state=host_state(state),
+                                 contributors=tuple(contributors))
+        st = host_state(state)
+        h = state_hash(st)
+        with self._mutate:
+            with self._meta:
+                version = self.local.push(name, st)
+                op = Op(seq=self._applied.get(name, -1) + 1, kind="merge",
+                        name=name, version=version, state_hash=h,
+                        term=self.term, contributors=tuple(contributors))
+                self._commit_meta(op, st)
+            self._broadcast(op, {h: st})
+            return version
+
+    def version_hash(self, name: str, version: int) -> Optional[str]:
+        """Content hash this host holds for (`name`, `version`), or None —
+        how a merge leader names the base its round's deltas are measured
+        against, and how contributors verify they sit on that base."""
+        with self._meta:
+            vh = self._vhash.get(name, [])
+            return vh[version] if 0 <= version < len(vh) else None
+
+    def merge_landed(self, name: str, seq: int, host: str) -> bool:
+        """Did a merge op newer than `seq` BOTH name `host` as a
+        contributor AND get promoted live?  The durable answer to "was my
+        sketch installed" — a host resolves its pending carry record with
+        this at collect time when the round's commit message never
+        arrived (leader crash, dropped send).  Requiring a later promote
+        op for the merge's version matters: a `push_merged` whose quorum
+        promote then aborted leaves a merge op in the log but never moved
+        any live pointer, and finalizing the carry on it would silently
+        drop the un-installed signal.  (A later operator `rollback` of a
+        promoted merge is out of scope — error feedback accounts for
+        compression loss, not for history rewrites.)"""
+        with self._meta:
+            log = self._log.get(name, [])
+            promoted = {op.version for op in log if op.kind == "promote"}
+            for op in reversed(log):
+                if op.seq <= seq:
+                    return False
+                if op.kind == "merge" and host in op.contributors \
+                        and op.version in promoted:
+                    return True
+            return False
+
+    def fence_if_stale(self, term: Optional[int]) -> Optional[Message]:
+        """A fenced nack if `term` is stale, else None — the atomic
+        decide-before-reply recheck merge handlers run after their
+        (unlocked) sketch math, mirroring `_handle_prepare`'s gate."""
+        if term is None:
+            return None
+        with self._meta:
+            if term < self.term:
+                return self._fenced_reply()
+        return None
 
     def promote(self, name: str, version: Optional[int] = None) -> int:
         """Two-phase fleet-wide flip.  Phase 1 (`prepare`): every reachable
@@ -546,6 +655,10 @@ class ReplicatedRegistry:
                                        replace=msg.get("replace", False))
             elif kind == "push":
                 result = self.push(msg["name"], msg["state"])
+            elif kind == "push_merged":
+                result = self.push_merged(
+                    msg["name"], msg["state"],
+                    contributors=tuple(msg.get("contributors", ())))
             elif kind == "promote":
                 result = self.promote(msg["name"], msg.get("version"))
             elif kind == "rollback":
@@ -614,7 +727,7 @@ class ReplicatedRegistry:
             self._states.setdefault(op.state_hash, payload)
         if op.kind == "register":
             self._vhash[op.name] = [op.state_hash]
-        elif op.kind == "push":
+        elif op.kind in ("push", "merge"):
             self._vhash.setdefault(op.name, []).append(op.state_hash)
         if self.durable is not None and not self._recovering:
             if op.state_hash is not None and payload is not None:
@@ -737,11 +850,11 @@ class ReplicatedRegistry:
             if op.kind == "register":
                 target.register(op.name, op.model, payload,
                                 ensemble=op.ensemble, replace=True)
-            elif op.kind == "push":
+            elif op.kind in ("push", "merge"):
                 got = target.push(op.name, payload)
                 if got != op.version:
                     raise ReplicationError(
-                        f"push {op.name!r}: local version {got} != "
+                        f"{op.kind} {op.name!r}: local version {got} != "
                         f"op version {op.version} — log divergence")
             elif op.kind == "promote":
                 target.promote(op.name, op.version)
@@ -852,6 +965,10 @@ class ReplicatedRegistry:
             except _Fenced:
                 return self._fenced_reply()
             return {"ok": True}
+        if req in ("merge_collect", "merge_commit"):
+            if self.merger is None:
+                return {"ok": False, "error": "no merger attached"}
+            return self.merger.handle(msg)
         if req == "status":
             return self.status()
         if req == "join":
@@ -863,12 +980,14 @@ class ReplicatedRegistry:
 
     def _check_term(self, msg: Message) -> Optional[Message]:
         """Fencing gate for leader-originated RPCs (`op`, `prepare`,
-        `catchup`): a message from a stale term is rejected with a fenced
-        nack naming the current term and leader; a HIGHER term is adopted
-        on the spot (the sender is the leader asserting it).  Messages
-        without a term (static fleets, reads) pass untouched."""
+        `catchup`, `merge_collect`, `merge_commit`): a message from a
+        stale term is rejected with a fenced nack naming the current term
+        and leader; a HIGHER term is adopted on the spot (the sender is
+        the leader asserting it).  Messages without a term (static
+        fleets, reads) pass untouched."""
         term = msg.get("term")
-        if term is None or msg.get("req") not in ("op", "prepare", "catchup"):
+        if term is None or msg.get("req") not in (
+                "op", "prepare", "catchup", "merge_collect", "merge_commit"):
             return None
         with self._meta:
             if term < self.term:

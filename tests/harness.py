@@ -35,9 +35,11 @@ from typing import Any, Dict, Hashable, List, Optional
 
 import jax
 
+from repro.dist.compress import CompressConfig
 from repro.dr import DRModel, EASIStage, RPStage
 from repro.serve import (BucketPolicy, DRService, DeadlineScheduler, Elector,
-                         LocalBus, ReplicatedRegistry, VirtualClock)
+                         FleetMerger, LocalBus, ReplicatedRegistry,
+                         VirtualClock)
 
 
 def small_model(m: int = 32, p: int = 16, n: int = 8, block: int = 4) -> DRModel:
@@ -165,6 +167,8 @@ class FleetHarness:
                  buckets: Optional[BucketPolicy] = None,
                  durable: bool = False, data_root: Optional[str] = None,
                  fsync: bool = True, compact_every: int = 256,
+                 merge: bool = False,
+                 merge_cfg: Optional[CompressConfig] = None,
                  **service_kw: Any):
         if n_hosts < 1:
             raise ValueError("need at least the leader host")
@@ -200,6 +204,16 @@ class FleetHarness:
         self.services: List[DRService] = [
             DRService(registry=reg, clock=self.clock, **kw)
             for reg in self.registries]
+        # fleet-merge agents (merge=True): one FleetMerger per host, all
+        # on the same CompressConfig so sketches decode coherently
+        self._merge = merge
+        self._merge_cfg = merge_cfg if merge_cfg is not None \
+            else CompressConfig(ratio=8, min_size=64)
+        self.mergers: List[FleetMerger] = []
+        if merge:
+            self.mergers = [
+                FleetMerger(svc, compress_cfg=self._merge_cfg)
+                for svc in self.services]
 
     def _durable_kw(self, host_id: str) -> Dict[str, Any]:
         if not self.durable:
@@ -235,6 +249,9 @@ class FleetHarness:
         svc = DRService(registry=reg, clock=self.clock, **kw)
         self.registries.append(reg)
         self.services.append(svc)
+        if self._merge:
+            self.mergers.append(FleetMerger(svc,
+                                            compress_cfg=self._merge_cfg))
         return svc
 
     # ---- crash / restart (durable=True) ------------------------------------
@@ -248,6 +265,7 @@ class FleetHarness:
         self.registries.pop(idx)
         self.services.pop(idx)
         self.electors = [e for e in self.electors if e.host_id != host_id]
+        self.mergers = [m for m in self.mergers if m.host_id != host_id]
         return host_id
 
     def restart_host(self, host_id: str, *, role: str = "follower",
@@ -273,6 +291,12 @@ class FleetHarness:
                 self._make_elector(reg, int(host_id.lstrip("h") or 0)))
         svc = DRService(registry=reg, clock=self.clock, **self._service_kw)
         self.services.append(svc)
+        if self._merge:
+            # the merger seeds its error-feedback residuals from the
+            # registry's recovered WAL state — the crash-safety the
+            # residual record kind exists for
+            self.mergers.append(FleetMerger(svc,
+                                            compress_cfg=self._merge_cfg))
         try:
             reg.join()
         except Exception:               # noqa: BLE001 — no reachable leader
@@ -362,6 +386,23 @@ class FleetHarness:
         if all(r.leader == lid and r.term == lterm for r in regs):
             return lid
         return None
+
+    # ---- fleet merge driving (merge=True) ----------------------------------
+    def merger_for(self, host_id: str) -> FleetMerger:
+        for m in self.mergers:
+            if m.host_id == host_id:
+                return m
+        raise KeyError(f"no merger for {host_id!r}")
+
+    def pump_merge(self, name: str) -> Dict[str, Any]:
+        """Run one leader-coordinated merge round on whoever currently
+        leads.  LocalBus delivery is synchronous, so when this returns
+        the whole round — collect, sketch-sum, quorum promote, commit —
+        has happened; the report is the leader's round report."""
+        assert self.mergers, "FleetHarness(merge=True) required"
+        lead = self.current_leader() if self._elect else self.leader
+        assert lead is not None, "no agreed leader to drive the merge"
+        return self.merger_for(lead.transport.host_id).merge_round(name)
 
     # ---- fleet observation -------------------------------------------------
     def live_versions(self, name: str) -> List[Optional[int]]:

